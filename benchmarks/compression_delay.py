@@ -1,0 +1,61 @@
+"""Beyond-paper ablation: uplink gradient compression × the delay model.
+
+The paper charges every client s_c = 28.1 kbit per round for the LoRA-update
+upload.  Top-k sparsification (+ error feedback, convergence-safe) shrinks
+the uplink; re-running the paper's allocator with the compressed s_c
+quantifies the end-to-end training-delay impact — an optimisation the paper
+does not consider but its framework directly prices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.config import FedsLLMConfig
+from repro.core import delay_model as dm
+from repro.core import resource_alloc as ra
+from repro.core.compression import compressed_bits, dense_bits
+
+
+def run(fractions=(1.0, 0.25, 0.1, 0.01), num_clients=50, seed=0, verbose=True,
+        lora_params: int | None = None):
+    """With the paper's own s_c = 28.1 kbit (a 281-param linear model) the
+    uplink is negligible and compression gains ~0 % — an honest negative
+    result.  With a *real LLM LoRA* upload (default: the fedsllm-100m
+    adapter, ~1.6 M params = 52 Mbit fp32) the uplink dominates the round
+    and top-k compression buys large delay reductions — the regime the
+    paper's framework prices but does not explore."""
+    if lora_params is None:
+        from repro.config import get_arch
+        from repro.core.lora import lora_param_count
+
+        lora_params = lora_param_count(get_arch("fedsllm-100m"))
+    base = FedsLLMConfig(num_clients=num_clients,
+                         s_c_bits=float(lora_params * 32))
+    net = dm.sample_network(base, seed=seed)
+    rows = []
+    for frac in fractions:
+        if frac >= 1.0:
+            s_c = base.s_c_bits
+            tag = "dense_fp32"
+        else:
+            idx_bits = int(np.ceil(np.log2(max(lora_params, 2))))
+            k = max(1, int(np.ceil(frac * lora_params)))
+            s_c = k * (8 + idx_bits)  # int8 values + indices
+            tag = f"topk_{frac:.2f}_int8"
+        cfg = dataclasses.replace(base, s_c_bits=float(s_c))
+        a = ra.optimize(cfg, net, "proposed", eta_search="coarse")
+        rows.append(dict(tag=tag, s_c_bits=s_c, T=a.T, eta=a.eta))
+        if verbose:
+            print(f"{tag:18s} s_c={s_c/1e6:8.2f} Mbit  T*={a.T:9.1f}s  η*={a.eta:.2f}",
+                  flush=True)
+    if verbose and len(rows) > 1:
+        print(f"\ncompression delay gain vs dense: "
+              f"{100*(1 - rows[-1]['T']/rows[0]['T']):.2f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

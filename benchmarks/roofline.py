@@ -1,0 +1,111 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every (arch × shape) single-pod cell, computes the three terms from the
+composed (scan-corrected) per-device HLO costs:
+
+    compute_s    = flops_per_device / 197e12        (bf16 MXU peak, v5e)
+    memory_s     = bytes_per_device / 819e9         (HBM bandwidth)
+    collective_s = collective_bytes_per_device / 50e9  (ICI per-link)
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train,
+2·N(_active)·D for prefill, 2·N·B for decode, and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPS (catches remat/redundancy waste).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops(rec) -> float:
+    """Global model flops for the cell's step (see module docstring)."""
+    N = rec["params_active"]
+    kind = rec["kind"]
+    tokens = rec["seq_len"] * rec["global_batch"]
+    if kind == "train":
+        return 6.0 * N * tokens
+    if kind == "prefill":
+        return 2.0 * N * tokens
+    return 2.0 * N * rec["global_batch"]  # decode: one token per row
+
+
+def analyse_cell(rec) -> dict | None:
+    if rec.get("skipped") or not rec.get("ok"):
+        return None
+    src = rec.get("composed") or {
+        "flops_per_device": rec["full"]["flops_per_device"],
+        "bytes_per_device": rec["full"]["bytes_per_device"],
+        "s2_bytes_per_device": rec["full"].get("s2_bytes_per_device", 0.0),
+        "collective_bytes_per_device": rec["full"]["collectives"]["bytes_per_device"],
+    }
+    n_dev = rec["num_devices"]
+    compute_s = src["flops_per_device"] / PEAK_FLOPS
+    memory_s = src["bytes_per_device"] / HBM_BW
+    # flash-kernel-adjusted memory: S²-shaped (attention-logit) op traffic
+    # stays in VMEM when the Pallas flash kernel runs on real TPU
+    s2 = src.get("s2_bytes_per_device", 0.0)
+    memory_s_flash = max(src["bytes_per_device"] - s2, 0.0) / HBM_BW
+    coll_s = src["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s_flash, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = src["flops_per_device"] * n_dev
+    bound_s = max(terms.values())
+    # roofline fraction: useful model flops per device-second at the bound
+    mfu_at_bound = (mf / n_dev / PEAK_FLOPS) / bound_s if bound_s > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_s_flash": memory_s_flash, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": mfu_at_bound,
+        "hbm_gb_per_device": rec["full"]["memory"]["total_hbm_bytes"] / 1e9,
+    }
+
+
+def load_table(mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyse_cell(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def print_table(rows, file=None):
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'mem_flash':>10s} {'collect_s':>10s} {'bound':>10s} {'useful':>7s} "
+           f"{'roofline%':>9s} {'HBM_GB':>7s}")
+    print(hdr, file=file)
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r.get('memory_s_flash', r['memory_s']):10.4f} "
+              f"{r['collective_s']:10.4f} {r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+              f"{100*r['roofline_fraction']:9.2f} {r['hbm_gb_per_device']:7.2f}",
+              file=file)
+
+
+def main():
+    rows = load_table()
+    print_table(rows)
+    out = os.path.join(DRYRUN_DIR, "..", "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nsaved -> results/roofline.json ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Batched serving demo: prefill + decode across three model families
+(dense / SSM / hybrid) with KV- and state-caches.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import time
+
+import jax
+
+from repro.config import get_arch, smoke_variant
+from repro.models import transformer as T
+from repro.serving.decode import decode_tokens
+
+
+def main():
+    for arch in ("fedsllm-100m", "mamba2-130m", "recurrentgemma-9b"):
+        cfg = smoke_variant(get_arch(arch))
+        params, _ = T.init_params(cfg, key=jax.random.PRNGKey(0))
+        B, Sp, new = 4, 16, 12
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (B, Sp), 0, cfg.vocab_size)
+        t0 = time.time()
+        out = decode_tokens(params, cfg, prompt, max_new=new)
+        dt = time.time() - t0
+        print(f"{arch:22s} family={cfg.family:7s} batch={B} "
+              f"generated {out.shape[1]} tokens/row in {dt:5.2f}s "
+              f"({B*new/dt:6.1f} tok/s incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

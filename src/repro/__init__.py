@@ -1,0 +1,9 @@
+"""repro: FedsLLM — Federated Split Learning for LLMs over Communication Networks.
+
+A production-grade JAX framework implementing the FedsLLM paper (Zhao et al.,
+2024): LoRA + split-fed learning with wireless-network delay optimisation,
+plus a 10-architecture model zoo, multi-pod sharding, Pallas TPU kernels,
+checkpointing and serving.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,33 @@
+"""The paper's own experimental setting.
+
+The paper does not pin a specific LLM architecture — it fine-tunes "a large
+language model" with LoRA on the BlogFeedback dataset [12] (60 021 samples x
+281 dims) with 50 users over a 20 MHz FDMA uplink.  We register (a) the
+wireless/simulation config exactly as in §IV, and (b) a ~100M decoder LM used
+by the end-to-end training examples (small enough to train a few hundred
+steps on this CPU container, structured like the assigned archs)."""
+
+from repro.config import FedsLLMConfig, LoRAConfig, ModelConfig, register_arch
+
+# Paper §IV simulation constants (see FedsLLMConfig defaults for the full set)
+PAPER_SIM = FedsLLMConfig()
+
+
+@register_arch("fedsllm-100m")
+def fedsllm_100m() -> ModelConfig:
+    return ModelConfig(
+        name="fedsllm-100m",
+        family="dense",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32_000,
+        mlp_activation="swiglu",
+        norm_type="rmsnorm",
+        use_rope=True,
+        layer_pattern="G",
+        lora=LoRAConfig(rank=16, alpha=32.0),
+    )

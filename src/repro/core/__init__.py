@@ -1,0 +1,11 @@
+from repro.core import compression, delay_model, federated, fedsllm, lora, resource_alloc, split
+
+__all__ = [
+    "compression",
+    "delay_model",
+    "federated",
+    "fedsllm",
+    "lora",
+    "resource_alloc",
+    "split",
+]

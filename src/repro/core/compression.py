@@ -1,0 +1,76 @@
+"""Uplink gradient/update compression (beyond-paper distributed-optimisation
+trick).
+
+The paper charges s_c = 28.1 kbit per client-side upload.  Top-k
+sparsification with error feedback (memory) + int8 quantisation shrinks the
+simulated uplink volume; ``compressed_bits`` feeds the delay model so the
+resource allocator sees the smaller s_c.  Error feedback keeps convergence
+(Karimireddy et al. 2019) — validated in tests by training with/without.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_mask(x: jax.Array, fraction: float) -> jax.Array:
+    """Keep the top-|fraction| entries by magnitude (per-leaf)."""
+    n = x.size
+    k = max(1, int(math.ceil(fraction * n)))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_tree(tree, fraction: float, error: Optional[dict] = None):
+    """Top-k + error feedback. Returns (sparse_tree, new_error, bits)."""
+    if error is None:
+        error = jax.tree.map(jnp.zeros_like, tree)
+    corrected = jax.tree.map(lambda g, e: g + e, tree, error)
+    masks = jax.tree.map(lambda x: topk_mask(x, fraction), corrected)
+    sparse = jax.tree.map(lambda x, m: x * m, corrected, masks)
+    new_error = jax.tree.map(lambda x, s: x - s, corrected, sparse)
+    bits = compressed_bits(tree, fraction)
+    return sparse, new_error, bits
+
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return q.astype(dtype) * scale
+
+
+def compress_tree_int8(tree):
+    """int8 quantise every leaf. Returns (q_tree, bits)."""
+    q = jax.tree.map(lambda x: quantize_int8(x), tree)
+    bits = sum(x.size * 8 + 32 for x in jax.tree.leaves(tree))
+    return q, bits
+
+
+def decompress_tree_int8(q_tree):
+    return jax.tree.map(lambda qs: dequantize_int8(*qs), q_tree,
+                        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+
+
+def compressed_bits(tree, fraction: float, index_bits: Optional[int] = None,
+                    value_bits: int = 32) -> float:
+    """Uplink volume of a top-k sparsified tree (values + indices)."""
+    total = 0.0
+    for x in jax.tree.leaves(tree):
+        n = x.size
+        k = max(1, int(math.ceil(fraction * n)))
+        ib = index_bits if index_bits is not None else max(1, math.ceil(math.log2(max(n, 2))))
+        total += k * (value_bits + ib)
+    return total
+
+
+def dense_bits(tree, value_bits: int = 32) -> float:
+    return float(sum(x.size for x in jax.tree.leaves(tree)) * value_bits)

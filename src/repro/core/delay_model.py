@@ -1,0 +1,190 @@
+"""FedsLLM training-delay model (paper §III, eqs. 8–15) + wireless channel.
+
+Implements, exactly as in the paper:
+  * Lemma 1:  I0 = a/(1-η),  a = (2L²/γ²ξ)·ln(1/ε0)      (global rounds)
+  * Lemma 2:  i ≥ v·log2(1/η),  v = 2/((2-Lδ)δγ)          (local iterations)
+  * eq. (10): τ_k = E_k·log2(1/η)·(A/f_k + (1-A)/f_s),  E_k = v|w|C_k D_k
+  * eq. (11): r = b·log2(1 + g·p/(N·b))                    (FDMA rate)
+  * eq. (15): T_k = I0·(τ_k + t_c,k + v·log2(1/η)·t_s,k)
+
+Channel realisation follows §IV: K users uniform in a 500 m square around
+the BS, path loss 128.1 + 37.6·log10(d_km) dB, 8 dB log-normal shadowing,
+N0 = −174 dBm/Hz, C_k ~ U[1,3]·1e4 cycles, p_max = 10 dBm, f_max = 2 GHz.
+All math is numpy (host-side — this is the simulator that drives the
+resource allocator, not device compute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.config import FedsLLMConfig
+
+
+# ---------------------------------------------------------------------------
+# Units
+# ---------------------------------------------------------------------------
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) / 1000.0
+
+
+def db_to_lin(db: float) -> float:
+    return 10.0 ** (db / 10.0)
+
+
+# ---------------------------------------------------------------------------
+# Network realisation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Network:
+    """One sampled wireless network + client heterogeneity realisation."""
+
+    g_c: np.ndarray  # (K,) linear channel gains to fed server
+    g_s: np.ndarray  # (K,) linear channel gains to main server
+    C_k: np.ndarray  # (K,) cycles per (sample·param)
+    D_k: np.ndarray  # (K,) local dataset sizes
+    f_max: np.ndarray  # (K,) client CPU Hz
+    p_c_max: np.ndarray  # (K,) W
+    p_s_max: np.ndarray  # (K,) W
+    N0: float  # W/Hz
+    B_c: float  # Hz
+    B_s: float  # Hz
+    f_server: float  # Hz
+
+    @property
+    def K(self) -> int:
+        return len(self.g_c)
+
+
+def sample_network(cfg: FedsLLMConfig, seed: int = 0, p_max_dbm: float | None = None) -> Network:
+    rng = np.random.default_rng(seed)
+    K = cfg.num_clients
+    half = cfg.area_m / 2.0
+    xy = rng.uniform(-half, half, size=(K, 2))
+    d_km = np.maximum(np.linalg.norm(xy, axis=1), 1.0) / 1000.0  # ≥1 m
+
+    def gains():
+        pl_db = cfg.pathloss_const_db + cfg.pathloss_exp * np.log10(d_km)
+        shadow = rng.normal(0.0, cfg.shadow_std_db, size=K)
+        return db_to_lin(-(pl_db + shadow))
+
+    p = dbm_to_watt(cfg.p_max_dbm if p_max_dbm is None else p_max_dbm)
+    # even sample split (paper: equal selection probability)
+    D = np.full(K, cfg.num_samples // K, dtype=float)
+    return Network(
+        g_c=gains(),
+        g_s=gains(),
+        C_k=rng.uniform(cfg.cycles_per_param_low, cfg.cycles_per_param_high, size=K),
+        D_k=D,
+        f_max=np.full(K, cfg.f_max_hz),
+        p_c_max=np.full(K, p),
+        p_s_max=np.full(K, p),
+        N0=dbm_to_watt(cfg.noise_psd_dbm_hz),  # W/Hz
+        B_c=cfg.bandwidth_total_hz,
+        B_s=cfg.bandwidth_total_hz,
+        f_server=cfg.f_server_hz,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lemma constants
+# ---------------------------------------------------------------------------
+
+
+def lemma_a(cfg: FedsLLMConfig) -> float:
+    """a = (2L²/γ²ξ)·ln(1/ε0)  (Lemma 1)."""
+    return 2.0 * cfg.L_smooth**2 / (cfg.gamma_strong**2 * cfg.xi) * np.log(1.0 / cfg.epsilon0)
+
+
+def lemma_v(cfg: FedsLLMConfig) -> float:
+    """v = 2/((2-Lδ)δγ)  (Lemma 2); requires δ < 2/L."""
+    assert cfg.delta < 2.0 / cfg.L_smooth
+    return 2.0 / ((2.0 - cfg.L_smooth * cfg.delta) * cfg.delta * cfg.gamma_strong)
+
+
+def global_rounds(cfg: FedsLLMConfig, eta: float) -> float:
+    return lemma_a(cfg) / (1.0 - eta)
+
+
+def local_iters(cfg: FedsLLMConfig, eta: float) -> float:
+    return lemma_v(cfg) * np.log2(1.0 / eta)
+
+
+# ---------------------------------------------------------------------------
+# Delay terms
+# ---------------------------------------------------------------------------
+
+
+def compute_time(cfg: FedsLLMConfig, net: Network, eta: float, A: float,
+                 model_params: int | None = None) -> np.ndarray:
+    """eq. (10): per-client compute time per global round (K,)."""
+    w = float(model_params if model_params is not None else cfg.sample_dim)
+    E_k = lemma_v(cfg) * w * net.C_k * net.D_k
+    return E_k * np.log2(1.0 / eta) * (A / net.f_max + (1.0 - A) / net.f_server)
+
+
+def rate(b: np.ndarray, g: np.ndarray, p: np.ndarray, N0: float) -> np.ndarray:
+    """eq. (11): FDMA uplink rate, bits/s.  Safe at b -> 0 (limit 0)."""
+    b = np.asarray(b, float)
+    out = np.zeros_like(b)
+    pos = b > 0
+    out[pos] = b[pos] * np.log2(1.0 + g[pos] * p[pos] / (N0 * b[pos]))
+    return out
+
+
+def rate_scalar(b: float, g: float, p: float, N0: float) -> float:
+    if b <= 0:
+        return 0.0
+    return b * np.log2(1.0 + g * p / (N0 * b))
+
+
+def bandwidth_for_rate(r_req: np.ndarray, g: np.ndarray, p: np.ndarray, N0: float) -> np.ndarray:
+    """Invert eq. (11) in closed form via Lambert W.
+
+    r = b·log2(1 + c/b), c = g·p/N0.  With t = c/b and q = r·ln2/c ∈ (0,1):
+    ln(1+t) = q·t  ⇒  t = −W₋₁(−q·e^{−q})/q − 1,  b = c/t.
+    rate(b) is increasing & concave with limit c/ln2; returns +inf where
+    r_req exceeds that capacity (infeasible regardless of bandwidth)."""
+    from scipy.special import lambertw
+
+    r_req = np.asarray(r_req, float)
+    c = g * p / N0  # received SNR-per-Hz numerator
+    q = r_req * np.log(2.0) / np.maximum(c, 1e-300)
+    out = np.full_like(r_req, np.inf)
+    zero = r_req <= 0
+    ok = (~zero) & (q < 1.0 - 1e-12)
+    if np.any(ok):
+        qq = q[ok]
+        w = np.real(lambertw(-qq * np.exp(-qq), k=-1))
+        t = -w / qq - 1.0
+        out[ok] = c[ok] / np.maximum(t, 1e-300)
+    out[zero] = 0.0
+    return out
+
+
+def round_latency(cfg: FedsLLMConfig, net: Network, eta: float, A: float,
+                  t_c: np.ndarray, t_s: np.ndarray,
+                  model_params: int | None = None) -> np.ndarray:
+    """eq. (15): total training latency per client, T_k (K,)."""
+    I0 = global_rounds(cfg, eta)
+    V = local_iters(cfg, eta)
+    tau = compute_time(cfg, net, eta, A, model_params)
+    return I0 * (tau + t_c + V * t_s)
+
+
+def energy(cfg: FedsLLMConfig, net: Network, eta: float, A: float,
+           t_c: np.ndarray, t_s: np.ndarray, model_params: int | None = None) -> np.ndarray:
+    """Per-client energy (κ·f²·cycles + p·t), for diagnostics/extensions."""
+    w = float(model_params if model_params is not None else cfg.sample_dim)
+    V = local_iters(cfg, eta)
+    cycles = V * np.log2(1.0 / eta) * w * net.C_k * net.D_k * A
+    e_cmp = cfg.kappa * net.f_max**2 * cycles
+    e_tx = net.p_c_max * t_c + net.p_s_max * V * t_s
+    return global_rounds(cfg, eta) * (e_cmp + e_tx)

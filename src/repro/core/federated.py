@@ -1,0 +1,66 @@
+"""Federated aggregation (the paper's fed-server role).
+
+Algorithm 1: Δw_c^(n+1) = Δw_c^(n) + (1/K)·Σ_k h_c,k^(n); the main server
+applies the same update to its server-side sub-models (Algorithm 2, last
+line).  On the TPU mesh the "upload + aggregate + broadcast" becomes a mean
+over the stacked client axis (lowered to an all-reduce over the ``data``/
+``pod`` axes when clients are sharded).
+
+Fault tolerance: ``fedavg`` takes an optional survivor ``mask`` so rounds
+tolerate dropped / straggling clients (deadline-based straggler mitigation —
+clients whose simulated wireless delay exceeds the round deadline simply
+don't contribute, matching over-provisioned cohorts in production FL).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fedavg(stacked, weights: Optional[jax.Array] = None, mask: Optional[jax.Array] = None):
+    """Weighted average over the leading client axis of every leaf.
+
+    stacked: pytree with leaves (K, ...); weights: (K,) e.g. D_k (paper:
+    weighted by data size); mask: (K,) 0/1 survivors."""
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return stacked
+    K = leaves[0].shape[0]
+    w = jnp.ones(K, jnp.float32) if weights is None else weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1e-12)
+    wn = w / denom
+
+    def one(x):
+        wb = wn.reshape((K,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(x.astype(jnp.float32) * wb, axis=0).astype(x.dtype)
+
+    return jax.tree.map(one, stacked)
+
+
+def apply_update(global_tree, avg_h, scale: float = 1.0):
+    """Δw ← Δw + scale·mean_k h_k (Algorithm 1 update)."""
+    return jax.tree.map(
+        lambda w, h: (w.astype(jnp.float32) + scale * h.astype(jnp.float32)).astype(w.dtype),
+        global_tree, avg_h)
+
+
+def broadcast(global_tree, K: int):
+    """Fed-server broadcast: replicate the global model to K client slots."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), global_tree)
+
+
+def client_sample(round_idx: int, num_clients: int, cohort: int, seed: int = 0) -> np.ndarray:
+    """Per-round client sampling (elastic cohorts)."""
+    rng = np.random.default_rng(seed * 1_000_003 + round_idx)
+    return np.sort(rng.choice(num_clients, size=min(cohort, num_clients), replace=False))
+
+
+def deadline_mask(T_k: np.ndarray, deadline: float) -> np.ndarray:
+    """Straggler mitigation: survivors are clients meeting the deadline."""
+    return (np.asarray(T_k) <= deadline).astype(np.float32)

@@ -1,0 +1,167 @@
+"""FedsLLM orchestration (paper Algorithms 1 + 2).
+
+One *global round* (index n):
+  1. broadcast global LoRA Δw = (Δw_c, Δw_s) to K clients,
+  2. round-start gradients: g_k0 = ∇F_k(Δw) per client, ḡ = (1/K)Σ g_k0
+     (the FEDL surrogate needs ∇F(Δw); this is the extra aggregation pass
+     from ref. [11] that the paper's problem (4) inherits),
+  3. local iterations i = 0..I_loc-1 on problem (4) by gradient descent
+     (eq. 9):   h ← h − δ·∇G_k(h),
+     ∇G_k(h) = ∇F_k(Δw+h) − ∇F_k(Δw) + ξ·∇F(Δw),
+     where each ∇F_k evaluation is a *split* forward/backward (client fwd →
+     smashed acts → server fwd/bwd → dA_k → client bwd),
+  4. fed server + main server aggregate:  Δw ← Δw + (1/K)·Σ_k h_k
+     (optionally masked for stragglers / dropped clients).
+
+Clients are evaluated with ``jax.vmap`` over the stacked client axis, which
+shards over the mesh ``data``(×``pod``) axes — client-parallelism *is* data
+parallelism on the pod (DESIGN.md §3).
+
+The number of local iterations follows Lemma 2 (v·log2(1/η)) and the number
+of global rounds follows Lemma 1 (a/(1−η)); the simulated wall-clock cost of
+each round comes from ``delay_model``/``resource_alloc``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedsLLMConfig, ModelConfig
+from repro.core import delay_model as dm
+from repro.core import federated, lora as lora_lib, split
+from repro.models import transformer as T
+
+
+class FedsLLMState(NamedTuple):
+    base: Any  # frozen w0
+    lora_c: Any  # global client-side adapters Δw_c
+    lora_s: Any  # global server-side adapters Δw_s
+    round: jax.Array  # global iteration n
+
+
+def init_state(cfg: ModelConfig, cut: int, key=None) -> tuple[FedsLLMState, Any]:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    base, axes = T.init_params(cfg, key=k1)
+    lora_full, lora_axes = lora_lib.init_lora(base, axes, cfg, key=k2)
+    lc, ls = lora_lib.split_client_server(lora_full, cut)
+    return FedsLLMState(base, lc, ls, jnp.zeros((), jnp.int32)), (axes, lora_axes)
+
+
+def local_iteration_count(fcfg: FedsLLMConfig, eta: float) -> int:
+    return max(1, int(math.ceil(dm.lemma_v(fcfg) * math.log2(1.0 / eta))))
+
+
+def global_round_count(fcfg: FedsLLMConfig, eta: float) -> int:
+    return max(1, int(math.ceil(dm.lemma_a(fcfg) / (1.0 - eta))))
+
+
+def make_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
+                  xi: Optional[float] = None, delta: Optional[float] = None,
+                  remat: bool = False, dp_clip: float = 0.0,
+                  dp_noise: float = 0.0) -> Callable:
+    """Build the jittable global-round function.
+
+    round_fn(state, batches, mask, key) -> (state', metrics)
+    batches: pytree with leaves stacked (K, ...) — one micro-dataset/client.
+    mask: (K,) survivors (straggler tolerance), or None.
+    dp_clip/dp_noise: per-client L2 clip + Gaussian noise multiplier on the
+    uploaded updates (DP-FedAvg; the paper's noise-layer counterpart at the
+    fed-server uplink). 0 disables.
+    """
+    xi = fcfg.xi if xi is None else xi
+    delta = fcfg.delta if delta is None else delta
+    I_loc = local_iteration_count(fcfg, eta)
+
+    def client_grads(base, lc, ls, batch):
+        loss, dc, ds, _ = split.split_value_and_grad(base, lc, ls, batch, cfg, cut,
+                                                     remat=remat)
+        return loss, (dc, ds)
+
+    def one_client_round(base, lc0, ls0, gk0, gbar, batch):
+        """Local GD on problem (4) for one client; returns (h_c, h_s, loss)."""
+
+        def grad_G(h):
+            hc, hs = h
+            lc = jax.tree.map(jnp.add, lc0, hc)
+            ls = jax.tree.map(jnp.add, ls0, hs)
+            loss, (dc, ds) = client_grads(base, lc, ls, batch)
+            # ∇G = ∇F_k(Δw+h) − ∇F_k(Δw) + ξ∇F(Δw)
+            gc = jax.tree.map(lambda a, b, c: a - b + xi * c, dc, gk0[0], gbar[0])
+            gs = jax.tree.map(lambda a, b, c: a - b + xi * c, ds, gk0[1], gbar[1])
+            return loss, (gc, gs)
+
+        h0 = (jax.tree.map(jnp.zeros_like, lc0), jax.tree.map(jnp.zeros_like, ls0))
+
+        def body(h, _):
+            loss, g = grad_G(h)
+            h = jax.tree.map(lambda x, gx: x - delta * gx, h, g)
+            return h, loss
+
+        h, losses = jax.lax.scan(body, h0, None, length=I_loc)
+        return h[0], h[1], losses[-1]
+
+    def round_fn(state: FedsLLMState, batches, mask=None, key=None):
+        K = jax.tree.leaves(batches)[0].shape[0]
+        # 2. round-start gradients per client (h=0)
+        loss0, g0 = jax.vmap(lambda b: client_grads(state.base, state.lora_c,
+                                                    state.lora_s, b))(batches)
+        # ḡ = ∇F(Δw) — fed-server aggregation (paper: uplink s_c per client)
+        gbar = (federated.fedavg(g0[0], mask=mask), federated.fedavg(g0[1], mask=mask))
+
+        # 3. local iterations (vmapped over clients)
+        h_c, h_s, last_loss = jax.vmap(
+            lambda gk_c, gk_s, b: one_client_round(state.base, state.lora_c,
+                                                   state.lora_s, (gk_c, gk_s), gbar, b)
+        )(g0[0], g0[1], batches)
+
+        # 3b. optional DP on the uploaded client updates
+        if dp_clip > 0.0:
+            from repro.core import privacy
+
+            key = key if key is not None else jax.random.PRNGKey(0)
+            h_c = privacy.clip_and_noise_updates(h_c, key, clip_norm=dp_clip,
+                                                 noise_multiplier=dp_noise)
+
+        # 4. aggregate + update (fed server for Δw_c, main server for Δw_s)
+        new_lc = federated.apply_update(state.lora_c, federated.fedavg(h_c, mask=mask))
+        new_ls = federated.apply_update(state.lora_s, federated.fedavg(h_s, mask=mask))
+        metrics = {
+            "loss_round_start": jnp.mean(loss0),
+            "loss_local_final": jnp.mean(last_loss),
+            "h_c_norm": lora_lib.delta_norm(h_c) if isinstance(h_c, dict) else jnp.zeros(()),
+        }
+        return FedsLLMState(state.base, new_lc, new_ls, state.round + 1), metrics
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Simulated wall-clock integration (delay model + allocator)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RoundTiming:
+    """Per-global-round simulated wireless wall-clock (seconds)."""
+
+    compute: np.ndarray  # (K,) eq. (10)
+    uplink_fed: np.ndarray  # (K,) t_c
+    uplink_main: np.ndarray  # (K,) V·t_s
+    total: np.ndarray  # (K,)
+
+
+def simulate_round_time(fcfg: FedsLLMConfig, net, alloc, eta: float,
+                        model_params: Optional[int] = None) -> RoundTiming:
+    V = dm.local_iters(fcfg, eta)
+    tau = dm.compute_time(fcfg, net, eta, alloc.A, model_params)
+    up_f = alloc.t_c
+    up_m = V * alloc.t_s
+    return RoundTiming(tau, up_f, up_m, tau + up_f + up_m)

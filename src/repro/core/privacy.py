@@ -1,0 +1,75 @@
+"""Privacy mechanisms for the FedsLLM uplink.
+
+The paper's Fig. 1 includes a client-side *noise layer* on the smashed
+activations and its delay model explicitly assumes "no privacy protection
+measures such as noise layers or differential privacy" when pricing the
+round — i.e. privacy is part of the framework but priced out of §III.  This
+module supplies both mechanisms so the framework is deployable where the
+assumption doesn't hold:
+
+  * ``clip_and_noise_updates`` — central/local DP for the fed-server upload
+    (per-client L2 clipping + Gaussian mechanism, Abadi et al. 2016): the
+    fed server aggregates   mean_k clip(h_k, c) + N(0, σ²c²/K).
+  * ``noise_layer`` — the paper's smashed-activation noise (additive
+    Gaussian at the split boundary, scaled to the activation RMS).
+  * ``privacy_cost`` — (ε, δ) accounting for the Gaussian mechanism across
+    rounds (simple composition; a production deployment would swap in RDP).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.grad_utils import global_norm
+
+
+def clip_tree(tree, clip_norm: float):
+    """Per-client L2 clip: h ← h · min(1, c/‖h‖)."""
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree)
+
+
+def clip_and_noise_updates(stacked, key, *, clip_norm: float = 1.0,
+                           noise_multiplier: float = 0.0):
+    """DP-FedAvg preprocessing on stacked (K, ...) client updates.
+
+    Clips every client's update to ``clip_norm`` and adds Gaussian noise
+    N(0, (σ·c)²) to the SUM (so the mean sees σ·c/K — standard DP-FedAvg).
+    Returns the processed stacked tree (aggregate with federated.fedavg)."""
+    K = jax.tree.leaves(stacked)[0].shape[0]
+    clipped = jax.vmap(lambda t: clip_tree(t, clip_norm))(stacked)
+    if noise_multiplier <= 0.0:
+        return clipped
+    leaves, treedef = jax.tree_util.tree_flatten(clipped)
+    keys = jax.random.split(key, len(leaves))
+    noisy = []
+    std = noise_multiplier * clip_norm  # noise on the sum
+    for leaf, k in zip(leaves, keys):
+        # add to client 0's slot: mean_k(x) + N(0, (σc)²)/K == fedavg(noisy)
+        n = jax.random.normal(k, leaf.shape[1:], jnp.float32) * std
+        noisy.append(leaf.at[0].add(n.astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+def noise_layer(acts: jax.Array, key, *, snr_db: float = 20.0) -> jax.Array:
+    """The paper's client-side noise layer on smashed activations: additive
+    Gaussian scaled to the activation RMS at the given SNR."""
+    rms = jnp.sqrt(jnp.mean(jnp.square(acts.astype(jnp.float32))) + 1e-12)
+    sigma = rms * (10.0 ** (-snr_db / 20.0))
+    return acts + (sigma * jax.random.normal(key, acts.shape, jnp.float32)).astype(acts.dtype)
+
+
+def privacy_cost(noise_multiplier: float, rounds: int, sample_rate: float = 1.0,
+                 delta: float = 1e-5) -> float:
+    """ε for ``rounds`` Gaussian-mechanism releases (advanced composition
+    upper bound; conservative)."""
+    if noise_multiplier <= 0:
+        return math.inf
+    eps_step = sample_rate * math.sqrt(2.0 * math.log(1.25 / delta)) / noise_multiplier
+    return eps_step * math.sqrt(2.0 * rounds * math.log(1.0 / delta)) + \
+        rounds * eps_step * (math.exp(eps_step) - 1.0)

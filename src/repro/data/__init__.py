@@ -1,0 +1,11 @@
+from repro.data.tokens import TokenStream, synthetic_lm_batch
+from repro.data.blog_feedback import BlogFeedback
+from repro.data.partition import dirichlet_partition, iid_partition
+
+__all__ = [
+    "TokenStream",
+    "synthetic_lm_batch",
+    "BlogFeedback",
+    "dirichlet_partition",
+    "iid_partition",
+]

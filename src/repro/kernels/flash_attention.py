@@ -1,0 +1,116 @@
+"""Flash attention Pallas TPU kernel (online softmax, causal / sliding-window
+/ logit-softcap / GQA).
+
+Layout: q (B, H, Sq, d), k/v (B, Kv, Skv, d), GQA via head-index mapping in
+the k/v BlockSpecs (no materialised repeat).  Grid = (B, H, Sq/bq, Skv/bk),
+kv innermost; running max/denominator/accumulator live in fp32 VMEM scratch
+and persist across the kv loop.  Fully-masked kv blocks (beyond the causal
+frontier or outside the sliding window) skip their compute via ``pl.when``.
+
+This is the TPU adaptation of the memory-bound attention hot spot: logits
+never round-trip to HBM (the jnp path materialises (bq, Skv) per row block),
+and tiles are MXU-aligned.  VMEM working set ≈ bq·d + 2·bk·d + bq·bk floats.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # block-level relevance (skip fully-masked blocks)
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window > 0:
+        needed = jnp.logical_and(needed, k_start + bk - 1 > q_start - window)
+
+    @pl.when(needed if not isinstance(needed, bool) else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q: (B, H, Sq, d); k/v: (B, Kv, Skv, d); returns (B, H, Sq, d)."""
+    B, H, Sq, d = q.shape
+    _, Kv, Skv, _ = k.shape
+    assert H % Kv == 0
+    rep = H // Kv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / math.sqrt(d)
+
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          softcap=softcap, bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

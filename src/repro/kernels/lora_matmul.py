@@ -1,0 +1,81 @@
+"""Fused LoRA matmul Pallas TPU kernel.
+
+Computes  y = x·W + scale·(x·A)·B  in a single VMEM pass over x:
+
+  * x tile (bm, bk) is read from HBM once and feeds BOTH the frozen-weight
+    matmul (MXU, bk×bn tiles of W) and the low-rank path (bk×r tile of A);
+    the naive two-op formulation reads x twice and round-trips the (M, r)
+    intermediate through HBM.
+  * The rank-r intermediate u = x·A accumulates in a (bm, r) fp32 VMEM
+    scratch across the K loop; on the last K step it is folded into the
+    accumulator via u·B (r ≤ 128, so the fold is a single MXU pass).
+  * Default block sizes are MXU-aligned (128, 128, 512).
+
+Grid = (M/bm, N/bn, K/bk), K innermost (sequential on TPU — VMEM scratch
+accumulators persist across K steps and are reset at k == 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, u_ref, *, scale: float, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    x = x_ref[...]
+    # frozen-weight path (MXU)
+    acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    # low-rank path: accumulate u = x·A (bm, r)
+    u_ref[...] += jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _fold():
+        u = u_ref[...]
+        delta = jnp.dot(u, b_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * delta).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk", "interpret"))
+def lora_matmul_pallas(x, w, a, b, *, scale: float = 1.0, bm: int = 128,
+                       bn: int = 128, bk: int = 512, interpret: bool = False):
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) -> (M, N)."""
+    M, K = x.shape
+    K2, N = w.shape
+    r = a.shape[1]
+    assert K == K2 == a.shape[0] and b.shape == (r, N)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+
+    grid = (M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bk, r), lambda m, n, k: (k, 0)),
+            pl.BlockSpec((r, bn), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused LoRA matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, *, scale: float = 1.0):
+    """y = x·W + scale·(x·A)·B, fp32 accumulation, cast to x.dtype."""
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, a, preferred_element_type=jnp.float32)
+    delta = jnp.dot(u, b.astype(jnp.float32), preferred_element_type=jnp.float32)
+    return (base + scale * delta).astype(x.dtype)

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.ssd_ref import ssd_scan_ref
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["ssd_scan", "ssd_scan_ref"]

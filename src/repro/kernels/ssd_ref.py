@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD scan kernel: the exact sequential recurrence
+h_t = exp(dt_t·A)·h_{t-1} + dt_t·(B_t ⊗ x_t),  y_t = C_t·h_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        a_t = jnp.exp(dt_t * Af[None, :])  # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", B_t, x_t * dt_t[..., None])
+        h = h * a_t[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y_t
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,H,P)

@@ -1,0 +1,94 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+State-space duality layout: per (batch, head) the sequence is processed in
+chunks of Q; the quadratic intra-chunk term and the state in/out projections
+are MXU matmuls; the (N, P) recurrent state lives in fp32 VMEM scratch and
+persists across the (sequential, innermost) chunk grid dimension:
+
+  y[c]    = tril(C_c·B_cᵀ ⊙ decay) · (dt·x)_c  +  (C_c ⊙ decay_in) · h_{c-1}
+  h_c     = exp(Σ log a_c) · h_{c-1}  +  B_cᵀ · (decay_out ⊙ (dt·x)_c)
+
+This is the TPU adaptation of the Mamba-2 GPU kernel: instead of warp-level
+scans, the inter-chunk recurrence is carried in VMEM between grid steps (the
+TPU grid is sequential), and all O(Q²)/O(Q·N·P) work is shaped for the MXU.
+
+Grid = (B, H, S/Q); chunks innermost.  x (B,S,H,P), dt (B,S,H) pre-scaled
+outside, A (H,), Bm/Cm (B,S,N) shared across heads (groups = 1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, Q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0].astype(jnp.float32)  # scalar (negative)
+    Bm = b_ref[0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    la = dt * A  # (Q,) log decay per step
+    cs = jnp.cumsum(la)  # (Q,)
+    xw = x * dt[:, None]  # dt-weighted input
+
+    # intra-chunk: scores[q, s] = (C_q·B_s) · exp(cs_q - cs_s) for s <= q
+    seg = cs[:, None] - cs[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    y = jax.lax.dot(scores, xw, preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    decay_in = jnp.exp(cs)[:, None]  # decay from chunk start to step q
+    y += jax.lax.dot(Cm * decay_in, state_ref[...],
+                     preferred_element_type=jnp.float32)  # (Q,N)x(N,P)
+
+    # state update: h = exp(sum la)·h + Bᵀ·(decay_to_end ⊙ xw)
+    total = cs[-1]
+    decay_out = jnp.exp(total - cs)[:, None]  # (Q, 1)
+    state_ref[...] = jnp.exp(total) * state_ref[...] + jax.lax.dot_general(
+        Bm, xw * decay_out, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (N, Q)x(Q, P) -> (N, P)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N) -> y (B,S,H,P)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    grid = (B, H, nc)
+    return pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,348 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we produce:
+  * the FULL scanned-model step compiled on the production mesh —
+    memory_analysis() proves it fits, the collective schedule is recorded,
+    and compilation success proves the sharding config is coherent;
+  * composition lowerings for the roofline: HLO cost analysis counts a
+    ``lax.scan`` body ONCE (verified in this container), so per-cell we also
+    lower loop-free reduced-depth variants: M1 (one layer group, unrolled),
+    M2 (two groups, unrolled), and M1t (one group + remainder tail) —
+    per-group cost = M2 − M1, stem cost = M1 − per-group, tail = M1t − M1,
+    total = stem + n_groups·per-group + tail.  This is exact up to XLA
+    fusion differences (reported as MODEL_FLOPS ratio in §Roofline).
+
+Results go to results/dryrun/<arch>__<shape>__<mesh>.json (incremental:
+existing cells are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (SHAPES, TrainConfig, get_arch, list_archs,
+                          shape_applicable)
+from repro.launch import specs as SP
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.registry import active_param_count, count_params
+from repro.parallel import RULESETS, sharding_context
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64|s16|u16)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8, "s16": 2, "u16": 2}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_OP_LINE_RE = re.compile(r"=\s*((?:\([^)]*\)|\S+))\s+[\w-]+\(")
+
+
+def parse_s2_traffic(hlo_text: str, s_threshold: int = 256) -> float:
+    """Bytes of attention-logit/prob intermediates — the (…, S_q, S_kv)
+    tensors a flash kernel keeps in VMEM instead of HBM.
+
+    Matched structurally: rank ≥ 5 with BOTH trailing dims ≥ threshold
+    (attention scores here are rank-5 `bkrqs` / rank-6 banded `bnkrqs`;
+    activations are rank-3, weights rank-2/3, MoE buffers rank-4, and decode
+    scores have a trailing (1, S) pair — none match).  Used for the
+    `memory_s_flash` roofline column: the Pallas flash-attention kernel
+    (oracle-validated) never round-trips these through HBM; the jnp fallback
+    the dry-run lowers does."""
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        shape_txt = m.group(1)
+        for dt, dims in _SHAPE_RE.findall(shape_txt):
+            if not dims:
+                continue
+            ds = [int(d) for d in dims.split(",")]
+            if len(ds) >= 5 and ds[-1] >= s_threshold and ds[-2] >= s_threshold:
+                n = 1
+                for d in ds:
+                    n *= d
+                total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Per-device ICI bytes using ring-model factors.
+
+    all-gather: (G-1)/G·out; all-reduce: 2(G-1)/G·size; reduce-scatter:
+    (G-1)·out; all-to-all: (G-1)/G·size; collective-permute: size."""
+    per_op: dict[str, float] = {}
+    count: dict[str, int] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op, _ = m.groups()
+        size = _shape_bytes(shape_txt)
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            ge = _GROUPS_EXPL_RE.search(line)
+            if ge:
+                g = len(ge.group(1).split(","))
+        if not g or g <= 1:
+            continue
+        if op == "all-gather":
+            b = (g - 1) / g * size
+        elif op == "all-reduce":
+            b = 2 * (g - 1) / g * size
+        elif op == "reduce-scatter":
+            b = (g - 1) * size
+        elif op == "all-to-all":
+            b = (g - 1) / g * size
+        else:  # collective-permute
+            b = float(size)
+        per_op[op] = per_op.get(op, 0.0) + b
+        count[op] = count.get(op, 0) + 1
+        total += b
+    return {"bytes_per_device": total, "per_op_bytes": per_op, "op_counts": count}
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _lower_cell(cfg, shape, mesh, rules, *, unroll: bool, tcfg: TrainConfig):
+    """Lower + compile one (cfg, shape) on mesh. Returns analysis dict."""
+    with sharding_context(mesh, rules):
+        params, axes = T.init_params(cfg, abstract=True)
+        psh = ST.param_shardings(axes, params, mesh, rules)
+        kind = shape.kind
+
+        if kind == "train":
+            step_fn, opt = ST.make_train_step(cfg, tcfg, unroll=unroll)
+            opt_state = ST.abstract_opt_state(opt, params)
+            osh = jax.tree.map(lambda _: 0, opt_state, is_leaf=lambda x: x is None)
+            osh = {k: psh for k in opt_state}  # m/v mirror params
+            batch = SP.train_batch_specs(cfg, shape)
+            bsh = ST.batch_shardings(batch, mesh, rules, kind)
+            step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            ssh = NamedSharding(mesh, P())
+            jfn = jax.jit(step_fn,
+                          in_shardings=(psh, osh, ssh, bsh),
+                          out_shardings=(psh, osh, ssh, None),
+                          donate_argnums=(0, 1))
+            lowered = jfn.lower(params, opt_state, step_spec, batch)
+        elif kind == "prefill":
+            pf = ST.make_prefill_step(cfg, unroll=unroll)
+            batch = SP.prefill_batch_specs(cfg, shape)
+            bsh = ST.batch_shardings(batch, mesh, rules, kind)
+            cache = SP.cache_specs(cfg, shape)
+            csh = ST.cache_shardings(cache, mesh, rules)
+            jfn = jax.jit(pf, in_shardings=(psh, bsh, csh),
+                          out_shardings=(None, csh), donate_argnums=(2,))
+            lowered = jfn.lower(params, batch, cache)
+        else:  # decode
+            sv = ST.make_serve_step(cfg, unroll=unroll)
+            toks = SP.decode_token_specs(cfg, shape)
+            tsh = NamedSharding(mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names), None)) \
+                if shape.global_batch % np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]) == 0 \
+                else NamedSharding(mesh, P())
+            cache = SP.cache_specs(cfg, shape)
+            csh = ST.cache_shardings(cache, mesh, rules)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            args = [params, toks, cache, pos]
+            in_sh = [psh, tsh, csh, NamedSharding(mesh, P())]
+            if cfg.family == "encdec":
+                eo = SP.enc_out_specs(cfg, shape)
+                esh = ST.batch_shardings({"frame_embeds": eo}, mesh, rules, kind)["frame_embeds"]
+                args.append(eo)
+                in_sh.append(esh)
+            jfn = jax.jit(sv, in_shardings=tuple(in_sh),
+                          out_shardings=(None, csh), donate_argnums=(2,))
+            lowered = jfn.lower(*args)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        print(f"    memory_analysis: {ma}", flush=True)
+        print(f"    cost_analysis: flops={ca.get('flops', 0.0):.4g} "
+              f"bytes={ca.get('bytes accessed', 0.0):.4g} (per device)", flush=True)
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        return {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+            "s2_bytes_per_device": parse_s2_traffic(hlo),
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "total_hbm_bytes": ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+            },
+            "compile_seconds": compile_s,
+            "hlo_bytes": len(hlo),
+        }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, calibrate: bool = True,
+             out_dir: str = RESULTS_DIR, force: bool = False) -> Optional[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(arch, shape_name):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "skipped": True,
+               "reason": "full-attention arch at 500k context (DESIGN.md §5)"}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = RULESETS[shape.kind]
+    tcfg = TrainConfig()
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "num_devices": int(np.prod(list(mesh.shape.values()))),
+        "params_total": count_params(cfg),
+        "params_active": active_param_count(cfg),
+        "skipped": False,
+    }
+    t_all = time.time()
+    try:
+        rec["full"] = _lower_cell(cfg, shape, mesh, rules, unroll=False, tcfg=tcfg)
+        if calibrate and mesh_kind == "single":
+            gs = cfg.group_size
+            rem = cfg.num_layers % gs
+            m1 = _lower_cell(cfg.replace(num_layers=gs), shape, mesh, rules,
+                             unroll=True, tcfg=tcfg)
+            m2 = _lower_cell(cfg.replace(num_layers=2 * gs), shape, mesh, rules,
+                             unroll=True, tcfg=tcfg)
+            rec["m1"], rec["m2"] = m1, m2
+            if rem:
+                rec["m1t"] = _lower_cell(cfg.replace(num_layers=gs + rem), shape,
+                                         mesh, rules, unroll=True, tcfg=tcfg)
+            rec["composed"] = compose_costs(rec, cfg)
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_seconds"] = time.time() - t_all
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def compose_costs(rec: dict, cfg) -> dict:
+    """total = stem + n_groups·per_group + tail (see module docstring)."""
+    n_groups = cfg.num_groups
+
+    def get(d, *ks):
+        for k in ks:
+            d = d[k]
+        return d
+
+    out = {}
+    for key, path in [("flops_per_device", ("flops_per_device",)),
+                      ("bytes_per_device", ("bytes_per_device",)),
+                      ("s2_bytes_per_device", ("s2_bytes_per_device",)),
+                      ("collective_bytes_per_device", ("collectives", "bytes_per_device"))]:
+        c1 = get(rec["m1"], *path)
+        c2 = get(rec["m2"], *path)
+        per_group = max(c2 - c1, 0.0)
+        stem = max(c1 - per_group, 0.0)
+        tail = max(get(rec["m1t"], *path) - c1, 0.0) if "m1t" in rec else 0.0
+        out[key] = stem + n_groups * per_group + tail
+        out[key + "_per_group"] = per_group
+        out[key + "_stem"] = stem
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def all_cells():
+    for arch in list_archs():
+        if arch == "fedsllm-100m":
+            continue  # example model, not an assigned cell
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", type=str, default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    for arch, shape_name in cells:
+        for mk in meshes:
+            t0 = time.time()
+            rec = run_cell(arch, shape_name, mk, out_dir=args.out, force=args.force)
+            status = "SKIP" if rec.get("skipped") else ("OK" if rec.get("ok") else "FAIL")
+            print(f"[{status}] {arch} × {shape_name} × {mk}  ({time.time()-t0:.1f}s)",
+                  flush=True)
+            if status == "FAIL":
+                print(rec.get("error"), flush=True)
+
+
+if __name__ == "__main__":
+    main()

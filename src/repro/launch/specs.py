@@ -1,0 +1,98 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  Modality frontends are stubs per the assignment: the VLM
+cell gets precomputed CLIP-L patch embeddings (B, Tv, 1024); the audio cell
+gets precomputed log-mel frame embeddings (B, 1500, d_model)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    Tv = 0
+    if cfg.family == "vlm":
+        Tv = min(cfg.vision_tokens, S // 2)
+        batch["vision_embeds"] = sds((B, Tv, 1024), cfg.dtype)
+    if cfg.family == "encdec":
+        batch["frame_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    batch["tokens"] = sds((B, S - Tv), jnp.int32)
+    batch["labels"] = sds((B, S), jnp.int32)
+    batch["mask"] = sds((B, S), jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    b = train_batch_specs(cfg, shape)
+    return b
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return sds((shape.global_batch, 1), jnp.int32)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract KV/state cache tree via eval_shape (no allocation)."""
+    from repro.models import transformer as T
+
+    B, S = shape.global_batch, shape.seq_len
+
+    def mk():
+        return T.init_cache(cfg, B, S)
+
+    return jax.eval_shape(mk)
+
+
+def enc_out_specs(cfg: ModelConfig, shape: ShapeConfig):
+    if cfg.family != "encdec":
+        return None
+    return sds((shape.global_batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+
+
+def input_specs(arch: str, shape_name: str = "train_4k") -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Training cells: {tokens, labels, mask} (+ modality-stub embeddings);
+    prefill: the request batch; decode: {tokens (B,1), cache, pos}."""
+    from repro.config import SHAPES, get_arch
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    out = {"tokens": decode_token_specs(cfg, shape),
+           "cache": cache_specs(cfg, shape),
+           "pos": sds((), jnp.int32)}
+    if cfg.family == "encdec":
+        out["enc_out"] = enc_out_specs(cfg, shape)
+    return out
+
+
+def concrete_like(specs, key=None, scale: float = 1.0):
+    """Materialise a spec tree with deterministic values (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    leaves, treedef = jax.tree_util.tree_flatten(specs)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            out.append(jax.random.randint(k, leaf.shape, 0, 100).astype(leaf.dtype))
+        elif jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append((jax.random.normal(k, leaf.shape) * scale).astype(leaf.dtype))
+        else:
+            out.append(jnp.zeros(leaf.shape, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

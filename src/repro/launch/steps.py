@@ -1,0 +1,148 @@
+"""Step builders: jittable train / prefill / serve steps + their sharding
+trees for a given (arch, shape, mesh) cell.
+
+The same builders serve the real trainer (concrete arrays) and the dry-run
+(ShapeDtypeStructs): everything here is shape-polymorphic and pure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import transformer as T
+from repro.optim.grad_utils import clip_by_global_norm
+from repro.optim.optimizers import get_optimizer
+from repro.optim.schedules import cosine_with_warmup
+from repro.parallel import RULESETS, spec_for
+from repro.parallel.sharding import Rules
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+
+def _axes_is_leaf(t):
+    return isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)
+
+
+def param_shardings(axes_tree, values_tree, mesh: Mesh, rules: Rules):
+    def one(axes, val):
+        return NamedSharding(mesh, spec_for(val.shape, axes, rules, mesh))
+
+    return jax.tree.map(one, axes_tree, values_tree, is_leaf=_axes_is_leaf)
+
+
+def opt_state_shardings(param_sh, opt_state_abstract):
+    """Optimizer moments mirror parameter shardings (ZeRO-via-FSDP)."""
+
+    def like(sub):
+        return param_sh
+
+    out = {}
+    for k, v in opt_state_abstract.items():
+        out[k] = param_sh  # m/v trees have identical structure to params
+    return out
+
+
+def batch_shardings(batch_specs, mesh: Mesh, rules: Rules, kind: str):
+    def one(path_leaf, leaf):
+        name = path_leaf
+        shape = leaf.shape
+        if name in ("tokens", "labels", "mask"):
+            axes = ("batch", "seq")
+        elif name == "vision_embeds":
+            axes = ("batch", "seq", None)
+        elif name == "frame_embeds":
+            axes = ("batch", None, "embed")
+        else:
+            axes = tuple([None] * len(shape))
+        return NamedSharding(mesh, spec_for(shape, axes, rules, mesh))
+
+    return {k: one(k, v) for k, v in batch_specs.items()}
+
+
+def cache_shardings(cache_tree, mesh: Mesh, rules: Rules):
+    axes = T.cache_axes(cache_tree)
+    return jax.tree.map(
+        lambda a, v: NamedSharding(mesh, spec_for(v.shape, a, rules, mesh)),
+        axes, cache_tree, is_leaf=_axes_is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, unroll: bool = False):
+    lr = cosine_with_warmup(tcfg.learning_rate, tcfg.warmup_steps, tcfg.total_steps)
+    opt = get_optimizer(tcfg.optimizer, lr, tcfg)
+    remat = tcfg.remat != "none"
+    loss_fn = functools.partial(T.loss_fn, cfg=cfg, remat=remat, unroll=unroll)
+
+    def grads_of(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            # gradient accumulation: scan over microbatches (fp32 accumulators)
+            M = tcfg.microbatch
+            B = jax.tree.leaves(batch)[0].shape[0]
+            assert B % M == 0, (B, M)
+            mb = B // M
+
+            def body(carry, i):
+                loss_a, g_a = carry
+                sub = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0),
+                    batch)
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, sub)
+                g_a = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_a, g)
+                return (loss_a + loss, g_a), metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, g), metrics = jax.lax.scan(body, (jnp.zeros(()), zeros),
+                                              jnp.arange(M))
+            inv = 1.0 / M
+            return (loss * inv, jax.tree.map(lambda m: m[-1], metrics)), \
+                jax.tree.map(lambda x: x * inv, g)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return (loss, metrics), grads
+
+    def train_step(params, opt_state, step, batch):
+        (loss, metrics), grads = grads_of(params, batch)
+        grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        out_metrics = {"loss": loss, "grad_norm": gn, **metrics}
+        return params, opt_state, step + 1, out_metrics
+
+    return train_step, opt
+
+
+def abstract_opt_state(opt, params_abstract):
+    return jax.eval_shape(opt.init, params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, *, unroll: bool = False):
+    def prefill_step(params, batch, cache):
+        return T.prefill(params, batch, cfg, cache, unroll=unroll)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, unroll: bool = False):
+    def serve_step(params, tokens, cache, pos, enc_out=None):
+        logits, new_cache = T.decode_step(params, tokens, cache, pos, cfg,
+                                          enc_out=enc_out, unroll=unroll)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        return nxt, new_cache
+
+    return serve_step

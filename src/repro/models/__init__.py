@@ -1,0 +1,3 @@
+from repro.models.registry import build_model, count_params
+
+__all__ = ["build_model", "count_params"]

@@ -1,0 +1,15 @@
+from repro.optim.optimizers import Optimizer, adamw, adafactor, sgd
+from repro.optim.schedules import constant, cosine_with_warmup, linear_warmup
+from repro.optim.grad_utils import clip_by_global_norm, global_norm
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgd",
+    "constant",
+    "cosine_with_warmup",
+    "linear_warmup",
+    "clip_by_global_norm",
+    "global_norm",
+]

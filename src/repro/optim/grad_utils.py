@@ -1,0 +1,26 @@
+"""Gradient utilities: global-norm clipping, accumulation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(sq) if sq else jnp.zeros(()))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), gn
+
+
+def accumulate(microbatch_grads):
+    """Mean of a list of grad trees (gradient accumulation)."""
+    n = len(microbatch_grads)
+    out = microbatch_grads[0]
+    for g in microbatch_grads[1:]:
+        out = jax.tree.map(jnp.add, out, g)
+    return jax.tree.map(lambda x: x / n, out)

@@ -1,0 +1,159 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Each optimizer is a pair of pure functions (init, update) over pytrees.
+Moments are kept in ``moment_dtype`` (fp32 by default) while params may be
+bf16 — the update math runs in fp32 and casts back (mixed-precision
+training).  Moment tensors inherit the *parameter* sharding (ZeRO-style:
+since params are FSDP-sharded over ``data``, optimizer state is too).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0, moment_dtype="float32") -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def one(g, p, m=None):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            if m is None:
+                return (p.astype(jnp.float32) - lr_t * g32).astype(p.dtype), None
+            m_new = momentum * m.astype(jnp.float32) + g32
+            step_dir = g32 + momentum * m_new if nesterov else m_new
+            return ((p.astype(jnp.float32) - lr_t * step_dir).astype(p.dtype),
+                    m_new.astype(moment_dtype))
+
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda g, p: one(g, p)[0], grads, params)
+            return new_params, state
+        out = jax.tree.map(one, grads, params, state["m"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01, moment_dtype="float32") -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def one(g, p, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh = m_new / c1
+            vh = v_new / c2
+            upd = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * upd).astype(p.dtype),
+                    m_new.astype(moment_dtype), v_new.astype(moment_dtype))
+
+        out = jax.tree.map(one, grads, params, state["m"], state["v"])
+        isleaf = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=isleaf),
+                {"m": jax.tree.map(lambda t: t[1], out, is_leaf=isleaf),
+                 "v": jax.tree.map(lambda t: t[2], out, is_leaf=isleaf)})
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable | float, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments for >=2D params (memory: O(m+n) not O(mn)).
+
+    Used for the very largest configs (qwen3-235b) where full AdamW moments
+    dominate HBM; see EXPERIMENTS.md §Perf."""
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        def z(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def one(g, p, f):
+            g32 = g.astype(jnp.float32)
+            sq = g32 * g32 + eps
+            if g.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * jnp.mean(sq, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(sq, axis=-2)
+                rc = r / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), eps)
+                vhat = rc[..., None] * c[..., None, :]
+                upd = g32 / jnp.sqrt(vhat + eps)
+                new_f = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * sq
+                upd = g32 / jnp.sqrt(v + eps)
+                new_f = {"v": v}
+            rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype), new_f
+
+        isleaf_f = lambda t: isinstance(t, dict) and ("r" in t or "v" in t)
+        out = jax.tree.map(one, grads, params, state["f"], is_leaf=None)
+        isleaf = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=isleaf),
+                {"f": jax.tree.map(lambda t: t[1], out, is_leaf=isleaf)})
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr, cfg=None) -> Optimizer:
+    if name == "adamw":
+        kw = {}
+        if cfg is not None:
+            kw = dict(b1=cfg.beta1, b2=cfg.beta2, eps=cfg.eps, weight_decay=cfg.weight_decay,
+                      moment_dtype=cfg.moment_dtype)
+        return adamw(lr, **kw)
+    if name == "sgd":
+        return sgd(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(name)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+        return lr * w
+
+    return fn
+
+
+def cosine_with_warmup(lr: float, warmup_steps: int, total_steps: int,
+                       final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+
+    return fn

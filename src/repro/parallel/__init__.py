@@ -1,0 +1,27 @@
+from repro.parallel.sharding import (
+    ParamLeaf,
+    RULESETS,
+    activation_rules,
+    active_context,
+    make_param,
+    named_sharding_tree,
+    set_context,
+    shard,
+    sharding_context,
+    spec_for,
+    split_param_tree,
+)
+
+__all__ = [
+    "ParamLeaf",
+    "RULESETS",
+    "activation_rules",
+    "active_context",
+    "make_param",
+    "named_sharding_tree",
+    "set_context",
+    "shard",
+    "sharding_context",
+    "spec_for",
+    "split_param_tree",
+]

@@ -1,0 +1,3 @@
+from repro.serving.decode import DecodeState, decode_tokens, make_decode_fn, make_prefill_fn
+
+__all__ = ["DecodeState", "decode_tokens", "make_decode_fn", "make_prefill_fn"]

@@ -1,0 +1,66 @@
+"""Batched serving: prefill + single-token decode loop with KV/state caches.
+
+``serve_step`` (one new token against a seq_len-deep cache) is what the
+``decode_*``/``long_*`` dry-run shapes lower.  The decode sharding rules are
+weight-stationary 2-D TP (see parallel/sharding.py); local-attention layers
+use ring-buffer caches so a 32k context costs only ``window`` slots on
+gemma2/recurrentgemma."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+
+
+class DecodeState(NamedTuple):
+    cache: Any
+    pos: jax.Array  # current absolute position (int32 scalar)
+    tokens: jax.Array  # last emitted token (B, 1)
+    enc_out: Optional[jax.Array] = None  # encdec cross-attention memory
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    def prefill_fn(params, batch, cache):
+        logits, new_cache = T.prefill(params, batch, cfg, cache)
+        last = jnp.argmax(logits[:, -1:, :], axis=-1)
+        S = batch["tokens"].shape[1]
+        return DecodeState(new_cache, jnp.asarray(S, jnp.int32), last)
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig, sample: str = "greedy", temperature: float = 1.0):
+    def decode_fn(params, state: DecodeState, key=None):
+        logits, new_cache = T.decode_step(params, state.tokens, state.cache,
+                                          state.pos, cfg, enc_out=state.enc_out)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        else:
+            nxt = jax.random.categorical(key, logits[:, -1, :] / temperature)[:, None]
+        return DecodeState(new_cache, state.pos + 1, nxt, state.enc_out), logits
+
+    return decode_fn
+
+
+def decode_tokens(params, cfg: ModelConfig, prompt: jax.Array, max_new: int,
+                  max_seq: Optional[int] = None, sample: str = "greedy", seed: int = 0):
+    """Convenience driver: prefill prompt then generate ``max_new`` tokens."""
+    B, S = prompt.shape
+    max_seq = max_seq or (S + max_new)
+    cache = T.init_cache(cfg, B, max_seq)
+    batch = {"tokens": prompt, "labels": prompt}
+    prefill_fn = make_prefill_fn(cfg)
+    decode_fn = jax.jit(make_decode_fn(cfg, sample=sample))
+    state = jax.jit(prefill_fn)(params, batch, cache)
+    out = [state.tokens]
+    key = jax.random.PRNGKey(seed)
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        state, _ = decode_fn(params, state, sub)
+        out.append(state.tokens)
+    return jnp.concatenate(out, axis=1)

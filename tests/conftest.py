@@ -1,0 +1,9 @@
+import os
+
+# Tests run against the single host CPU device (the dry-run, and ONLY the
+# dry-run, forces 512 placeholder devices).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,105 @@
+"""Attention-variant equivalences: banded == full masked sliding window;
+chunked-q == full; RG-LRU associative scan == sequential recurrence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+settings.register_profile("ci3", deadline=None, max_examples=10)
+settings.load_profile("ci3")
+
+
+def _qkv(B, S, H, Kv, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, Kv, d))
+    v = jax.random.normal(ks[2], (B, S, Kv, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,window", [(64, 16), (128, 32), (96, 32)])
+def test_banded_equals_full_sliding_window(S, window):
+    """Block-banded local attention must equal the masked full computation
+    (exact for causal window ≤ block size)."""
+    B, H, Kv, d = 2, 4, 2, 16
+    q, k, v = _qkv(B, S, H, Kv, d)
+    full = L._attend_full(q, k, v, causal=True, window=window, softcap=0.0)
+    banded = L._attend_banded(q, k, v, window=window, softcap=0.0)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_banded_with_softcap():
+    B, S, H, Kv, d, window = 1, 64, 2, 1, 16, 16
+    q, k, v = _qkv(B, S, H, Kv, d, seed=3)
+    full = L._attend_full(q, k, v, causal=True, window=window, softcap=30.0)
+    banded = L._attend_banded(q, k, v, window=window, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_chunked_q_equals_full(chunk):
+    B, S, H, Kv, d = 1, 64, 2, 2, 16
+    q, k, v = _qkv(B, S, H, Kv, d, seed=1)
+    full = L._attend_full(q, k, v, causal=True, window=0, softcap=0.0)
+    chunked = L._attend_chunked_q(q, k, v, causal=True, window=0, softcap=0.0,
+                                  chunk=chunk)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(0, 50), st.integers(8, 48))
+def test_rglru_scan_equals_sequential(seed, S):
+    """Associative scan == step-by-step recurrence h_t = a_t h_{t-1} + b_t."""
+    from repro.models.rglru import _linear_scan
+
+    rng = np.random.default_rng(seed)
+    B, W = 2, 8
+    a = jnp.asarray(rng.uniform(0.5, 0.999, (B, S, W)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 0.5, (B, S, W)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(0, 1, (B, W)), jnp.float32)
+    ys = _linear_scan(a, b, h0)
+    # sequential reference
+    h = np.asarray(h0)
+    ref = []
+    an, bn = np.asarray(a), np.asarray(b)
+    for t in range(S):
+        h = an[:, t] * h + bn[:, t]
+        ref.append(h.copy())
+    ref = np.stack(ref, axis=1)
+    np.testing.assert_allclose(np.asarray(ys), ref, rtol=2e-4, atol=2e-5)
+
+
+def test_decode_attend_ring_vs_linear_cache():
+    """Ring-buffer decode for a window layer == linear cache decode with the
+    same window mask (positions beyond the window masked identically)."""
+    from repro.config import get_arch, smoke_variant
+
+    cfg = smoke_variant(get_arch("recurrentgemma-9b"))
+    window = cfg.sliding_window  # 32 in smoke
+    B, Kv, hd = 1, 1, cfg.head_dim
+    H = cfg.num_heads
+    S_hist = window + 7  # history longer than the window
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k_hist = jax.random.normal(ks[1], (B, S_hist, Kv, hd))
+    v_hist = jax.random.normal(ks[2], (B, S_hist, Kv, hd))
+    pos = S_hist - 1  # decoding the last position; k/v already contain it
+
+    # linear cache: full history with window mask
+    out_lin = L._decode_attend(q, k_hist, v_hist, cfg=cfg, window=window,
+                               cache_pos=jnp.asarray(pos), kpos_abs=None)
+    # ring cache: slot j holds position p ≤ pos with p % window == j
+    slots = np.asarray(L._ring_positions(jnp.asarray(pos), window))
+    ck = jnp.stack([k_hist[:, p] for p in slots], axis=1)
+    cv = jnp.stack([v_hist[:, p] for p in slots], axis=1)
+    out_ring = L._decode_attend(q, ck, cv, cfg=cfg, window=window,
+                                cache_pos=jnp.asarray(pos),
+                                kpos_abs=jnp.asarray(slots))
+    np.testing.assert_allclose(np.asarray(out_ring), np.asarray(out_lin),
+                               rtol=2e-5, atol=2e-5)

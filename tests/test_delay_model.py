@@ -1,0 +1,67 @@
+"""Delay model (eqs. 8-15): lemma constants, monotonicity, units."""
+
+import numpy as np
+import pytest
+
+from repro.config import FedsLLMConfig
+from repro.core import delay_model as dm
+
+
+def test_lemma_constants_match_paper_settings():
+    """Paper §IV: ξ=0.1, δ=0.1, ε0=1e-3 (with L=γ=1 normalisation)."""
+    cfg = FedsLLMConfig()
+    a = dm.lemma_a(cfg)
+    v = dm.lemma_v(cfg)
+    np.testing.assert_allclose(a, 2.0 / 0.1 * np.log(1e3), rtol=1e-12)
+    np.testing.assert_allclose(v, 2.0 / ((2 - 0.1) * 0.1), rtol=1e-12)
+
+
+def test_rounds_decrease_with_eta_to_zero():
+    """Lemma 1: I0 = a/(1-η) increases with η; local iterations v·log2(1/η)
+    decrease with η — the tradeoff the optimiser exploits."""
+    cfg = FedsLLMConfig()
+    etas = np.array([0.1, 0.3, 0.5, 0.7, 0.9])
+    I0 = np.array([dm.global_rounds(cfg, e) for e in etas])
+    V = np.array([dm.local_iters(cfg, e) for e in etas])
+    assert np.all(np.diff(I0) > 0)
+    assert np.all(np.diff(V) < 0)
+
+
+def test_compute_time_monotonicity():
+    cfg = FedsLLMConfig(num_clients=5)
+    net = dm.sample_network(cfg, seed=0)
+    t1 = dm.compute_time(cfg, net, 0.1, A=0.1)
+    t2 = dm.compute_time(cfg, net, 0.1, A=0.5)
+    assert np.all(t2 > t1), "more client-side layers -> slower (f_k << f_s)"
+    t3 = dm.compute_time(cfg, net, 0.5, A=0.1)
+    assert np.all(t3 < t1), "looser local accuracy -> fewer local iterations"
+
+
+def test_channel_units():
+    """10 dBm = 10 mW; N0 = -174 dBm/Hz ≈ 4e-21 W/Hz."""
+    assert abs(dm.dbm_to_watt(10.0) - 0.01) < 1e-12
+    assert abs(dm.dbm_to_watt(-174.0) - 10 ** (-17.4) / 1e3) < 1e-30
+
+
+def test_network_realisation_shapes():
+    cfg = FedsLLMConfig(num_clients=50)
+    net = dm.sample_network(cfg, seed=0)
+    assert net.K == 50
+    assert np.all(net.g_c > 0) and np.all(net.g_c < 1)
+    assert np.all((net.C_k >= cfg.cycles_per_param_low)
+                  & (net.C_k <= cfg.cycles_per_param_high))
+    np.testing.assert_allclose(net.D_k, cfg.num_samples // 50)
+
+
+def test_latency_formula_eq15():
+    """T_k = I0·(τ + t_c + V·t_s) assembled exactly."""
+    cfg = FedsLLMConfig(num_clients=3)
+    net = dm.sample_network(cfg, seed=2)
+    eta, A = 0.2, 0.1
+    t_c = np.array([1.0, 2.0, 3.0])
+    t_s = np.array([0.1, 0.2, 0.3])
+    T = dm.round_latency(cfg, net, eta, A, t_c, t_s)
+    I0 = dm.global_rounds(cfg, eta)
+    V = dm.local_iters(cfg, eta)
+    tau = dm.compute_time(cfg, net, eta, A)
+    np.testing.assert_allclose(T, I0 * (tau + t_c + V * t_s), rtol=1e-12)

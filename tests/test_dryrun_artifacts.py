@@ -1,0 +1,73 @@
+"""Regression gate over the dry-run artifacts (skips if not generated)."""
+
+import glob
+import json
+import os
+
+import pytest
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+files = sorted(glob.glob(os.path.join(DRYRUN, "*.json")))
+
+
+@pytest.mark.skipif(not files, reason="dry-run artifacts not generated")
+def test_all_cells_ok_or_documented_skip():
+    bad = []
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            assert rec["shape"] == "long_500k", path
+            continue
+        if not rec.get("ok"):
+            bad.append((os.path.basename(path), rec.get("error")))
+    assert not bad, bad
+
+
+@pytest.mark.skipif(not files, reason="dry-run artifacts not generated")
+def test_cell_coverage_complete():
+    """10 archs × 4 shapes × 2 meshes accounted for (compiled or skip)."""
+    names = {os.path.basename(p) for p in files}
+    from repro.config import SHAPES, list_archs
+
+    missing = []
+    for arch in list_archs():
+        if arch == "fedsllm-100m":
+            continue
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                if f"{arch}__{shape}__{mesh}.json" not in names:
+                    missing.append((arch, shape, mesh))
+    assert not missing, missing
+
+
+@pytest.mark.skipif(not files, reason="dry-run artifacts not generated")
+def test_decode_cells_fit_v5e_hbm():
+    """Post-§Perf decode/prefill cells must fit the 16 GB v5e budget
+    (train cells for >30B-class models are documented exceptions)."""
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped") or not rec.get("ok") or rec["mesh"] != "single":
+            continue
+        if rec["kind"] == "decode":
+            gb = rec["full"]["memory"]["total_hbm_bytes"] / 1e9
+            assert gb < 24.0, (path, gb)  # 16 GB + cost-model DUS overcount
+
+
+@pytest.mark.skipif(not files, reason="dry-run artifacts not generated")
+def test_multi_pod_cells_shard_the_pod_axis():
+    """512-device cells must report num_devices=512 and compile green."""
+    n = 0
+    for path in files:
+        if "__multi.json" not in path:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            continue
+        assert rec["num_devices"] == 512, path
+        assert rec["ok"], path
+        n += 1
+    assert n >= 30

@@ -1,0 +1,86 @@
+"""FedAvg invariants (hypothesis property tests) + straggler handling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import federated
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _stack(arrs):
+    return {"w": jnp.stack([jnp.asarray(a, jnp.float32) for a in arrs])}
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=2, max_size=8))
+def test_identical_clients_fixed_point(vals):
+    """FedAvg of identical client updates returns the same update."""
+    K = 4
+    arr = np.asarray(vals, np.float32)
+    tree = {"w": jnp.tile(jnp.asarray(arr)[None], (K, 1))}
+    avg = federated.fedavg(tree)
+    np.testing.assert_allclose(np.asarray(avg["w"]), arr, rtol=1e-6, atol=1e-30)
+
+
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_permutation_invariance(K, seed):
+    rng = np.random.default_rng(seed)
+    arrs = rng.normal(size=(K, 5)).astype(np.float32)
+    perm = rng.permutation(K)
+    a1 = federated.fedavg(_stack(arrs))
+    a2 = federated.fedavg(_stack(arrs[perm]))
+    np.testing.assert_allclose(np.asarray(a1["w"]), np.asarray(a2["w"]), atol=1e-5)
+
+
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_mean_in_convex_hull(K, seed):
+    rng = np.random.default_rng(seed)
+    arrs = rng.normal(size=(K, 3)).astype(np.float32)
+    avg = np.asarray(federated.fedavg(_stack(arrs))["w"])
+    assert np.all(avg <= arrs.max(axis=0) + 1e-5)
+    assert np.all(avg >= arrs.min(axis=0) - 1e-5)
+
+
+@given(st.integers(3, 8), st.integers(0, 100))
+def test_mask_excludes_stragglers(K, seed):
+    rng = np.random.default_rng(seed)
+    arrs = rng.normal(size=(K, 4)).astype(np.float32)
+    arrs[0] = 1e6  # poisoned straggler
+    mask = jnp.asarray([0.0] + [1.0] * (K - 1))
+    avg = np.asarray(federated.fedavg(_stack(arrs), mask=mask)["w"])
+    np.testing.assert_allclose(avg, arrs[1:].mean(axis=0), rtol=1e-4)
+
+
+def test_weighted_by_data_size():
+    """Paper eq. (3): aggregation weighted by D_k."""
+    arrs = np.array([[1.0, 1.0], [3.0, 3.0]], np.float32)
+    w = jnp.asarray([1.0, 3.0])
+    avg = np.asarray(federated.fedavg(_stack(arrs), weights=w)["w"])
+    np.testing.assert_allclose(avg, [2.5, 2.5], rtol=1e-6)
+
+
+def test_apply_update_and_broadcast_roundtrip():
+    g = {"w": jnp.ones((3,))}
+    K = 5
+    b = federated.broadcast(g, K)
+    assert jax.tree.leaves(b)[0].shape == (K, 3)
+    h = jax.tree.map(lambda x: x * 0.5, b)
+    new = federated.apply_update(g, federated.fedavg(h))
+    np.testing.assert_allclose(np.asarray(new["w"]), 1.5)
+
+
+def test_deadline_mask():
+    T_k = np.array([1.0, 5.0, 2.0])
+    m = federated.deadline_mask(T_k, 2.5)
+    np.testing.assert_array_equal(m, [1.0, 0.0, 1.0])
+
+
+def test_client_sample_deterministic():
+    s1 = federated.client_sample(3, 50, 10, seed=7)
+    s2 = federated.client_sample(3, 50, 10, seed=7)
+    np.testing.assert_array_equal(s1, s2)
+    assert len(np.unique(s1)) == 10

@@ -1,0 +1,86 @@
+"""LoRA: eq. (1) semantics, merge equivalence, zero-init, counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import LoRAConfig, get_arch, smoke_variant
+from repro.core import lora as lora_lib
+from repro.models import transformer as T
+from repro.models.registry import build_model
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4, alpha=8.0))
+    params, axes = T.init_params(cfg, key=jax.random.PRNGKey(0))
+    lora, laxes = lora_lib.init_lora(params, axes, cfg, key=jax.random.PRNGKey(1))
+    return cfg, params, axes, lora
+
+
+def test_lora_zero_init_is_identity(ctx):
+    """B = 0 at init -> merged model == base model (paper: Δw = 0)."""
+    cfg, params, axes, lora = ctx
+    merged = lora_lib.merge(params, lora, cfg)
+    m = build_model(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks, "mask": jnp.ones((2, 16), jnp.float32)}
+    l1, _ = m.forward(params, batch)
+    l2, _ = m.forward(merged, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+
+
+def test_merge_matches_factor_product(ctx):
+    cfg, params, axes, lora = ctx
+    key = next(iter(lora))
+    ab = lora[key]
+    A = ab["A"] + 0.1
+    B = ab["B"] + 0.2
+    lora2 = dict(lora)
+    lora2[key] = {"A": A, "B": B}
+    merged = lora_lib.merge(params, lora2, cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        if jax.tree_util.keystr(path) == key:
+            expected = leaf.astype(jnp.float32) + cfg.lora.scale * jnp.einsum(
+                "...ir,...ro->...io", A.astype(jnp.float32), B.astype(jnp.float32))
+            got = [l for p, l in jax.tree_util.tree_flatten_with_path(merged)[0]
+                   if jax.tree_util.keystr(p) == key][0]
+            np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=1e-5)
+            return
+    raise AssertionError("target leaf not found")
+
+
+def test_rank_bound(ctx):
+    """r << min(d, k): every adapter factor respects the configured rank."""
+    cfg, params, axes, lora = ctx
+    for ab in lora.values():
+        assert ab["A"].shape[-1] == cfg.lora.rank
+        assert ab["B"].shape[-2] == cfg.lora.rank
+        assert cfg.lora.rank < min(ab["A"].shape[-2], ab["B"].shape[-1])
+
+
+def test_param_count_matches_tree(ctx):
+    cfg, params, axes, lora = ctx
+    analytic = lora_lib.lora_param_count(cfg)
+    actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(lora))
+    assert analytic == actual
+
+
+def test_lora_trainable_fraction():
+    """LoRA must be a small fraction of the full model (the paper's point)."""
+    cfg = get_arch("fedsllm-100m")
+    frac = lora_lib.lora_param_count(cfg) / cfg.param_count()
+    assert frac < 0.05, frac
+
+
+@pytest.mark.parametrize("arch", ["olmoe-1b-7b", "mamba2-130m", "recurrentgemma-9b"])
+def test_lora_applies_across_families(arch):
+    cfg = smoke_variant(get_arch(arch)).replace(lora=LoRAConfig(rank=2, alpha=4.0))
+    params, axes = T.init_params(cfg, key=jax.random.PRNGKey(0))
+    lora, _ = lora_lib.init_lora(params, axes, cfg, key=jax.random.PRNGKey(1))
+    assert len(lora) > 0
+    merged = lora_lib.merge(params, lora, cfg)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(merged)):
+        assert a.shape == b.shape

@@ -1,0 +1,85 @@
+"""Fused chunked CE exactness + ring-buffer position bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_arch, smoke_variant
+from repro.models import layers as L
+from repro.models import transformer as T
+
+settings.register_profile("ci2", deadline=None, max_examples=20)
+settings.load_profile("ci2")
+
+
+@pytest.mark.parametrize("arch,chunk", [
+    ("fedsllm-100m", 16), ("gemma2-9b", 8), ("command-r-35b", 32),
+    ("phi4-mini-3.8b", 7),  # chunk not dividing S -> padding path
+])
+def test_fused_ce_matches_reference(arch, chunk):
+    cfg = smoke_variant(get_arch(arch))
+    params, _ = T.init_params(cfg, key=jax.random.PRNGKey(0))
+    B, S = 2, 24
+    kt, kl = jax.random.split(jax.random.PRNGKey(1))
+    batch = {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    logits, _ = T.forward(params, batch, cfg)
+    ref = L.cross_entropy(logits, batch["labels"], batch["mask"])
+    x, _ = T.hidden_states(params, batch, cfg)
+    fused = L.fused_cross_entropy(params["embed"], x, batch["labels"], cfg,
+                                  mask=batch["mask"], chunk=chunk)
+    np.testing.assert_allclose(float(fused), float(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_ce_grads_match_reference():
+    cfg = smoke_variant(get_arch("fedsllm-100m"))
+    params, _ = T.init_params(cfg, key=jax.random.PRNGKey(0))
+    B, S = 2, 16
+    kt, kl = jax.random.split(jax.random.PRNGKey(1))
+    batch = {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size),
+             "mask": jnp.ones((B, S), jnp.float32)}
+
+    def loss_ref(p):
+        logits, _ = T.forward(p, batch, cfg)
+        return L.cross_entropy(logits, batch["labels"], batch["mask"])
+
+    def loss_fused(p):
+        x, _ = T.hidden_states(p, batch, cfg)
+        return L.fused_cross_entropy(p["embed"], x, batch["labels"], cfg,
+                                     mask=batch["mask"], chunk=8)
+
+    g1 = jax.grad(loss_ref)(params)
+    g2 = jax.grad(loss_fused)(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_fused_ce_respects_mask():
+    cfg = smoke_variant(get_arch("fedsllm-100m"))
+    params, _ = T.init_params(cfg, key=jax.random.PRNGKey(0))
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model))
+    labels = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    m1 = jnp.ones((B, S), jnp.float32)
+    m2 = m1.at[:, : S // 2].set(0.0)
+    l_full = L.fused_cross_entropy(params["embed"], x, labels, cfg, mask=m1, chunk=8)
+    l_half = L.fused_cross_entropy(params["embed"], x, labels, cfg, mask=m2, chunk=8)
+    assert not np.isclose(float(l_full), float(l_half))
+
+
+@given(st.integers(0, 200), st.sampled_from([4, 8, 16]))
+def test_ring_positions_invariants(pos, window):
+    """Slot pos%window holds `pos`; all slots hold the largest position
+    ≤ pos congruent to the slot index."""
+    slots = np.asarray(L._ring_positions(jnp.asarray(pos), window))
+    assert slots[pos % window] == pos
+    for j, p in enumerate(slots):
+        assert p % window == j
+        assert p <= pos
+        assert p > pos - window

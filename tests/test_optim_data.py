@@ -1,0 +1,140 @@
+"""Optimizers, schedules, data pipeline, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression
+from repro.data.blog_feedback import BlogFeedback, ridge_loss_fn
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.tokens import TokenStream
+from repro.optim import adamw, adafactor, clip_by_global_norm, cosine_with_warmup, global_norm, sgd
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def quadratic_losses(opt, steps=60):
+    """Minimise ||x - t||² — loss must decrease monotonically-ish."""
+    t = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    state = opt.init(params)
+    losses = []
+    for i in range(steps):
+        g = jax.grad(lambda p: jnp.sum((p["x"] - t) ** 2))(params)
+        params, state = opt.update(g, state, params, jnp.asarray(i))
+        losses.append(float(jnp.sum((params["x"] - t) ** 2)))
+    return losses
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(0.1, momentum=0.9),
+    lambda: adamw(0.1, weight_decay=0.0),
+    lambda: adafactor(0.5),
+])
+def test_optimizers_converge_on_quadratic(make):
+    losses = quadratic_losses(make())
+    assert losses[-1] < 0.05 * (losses[0] + 1e-9)
+
+
+def test_adamw_bf16_params_fp32_moments():
+    opt = adamw(0.01)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    p2, s2 = opt.update(g, state, params, jnp.asarray(0))
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_with_warmup(1.0, warmup_steps=10, total_steps=100)
+    vals = [float(fn(jnp.asarray(s))) for s in range(100)]
+    assert vals[0] < 0.2                      # warmup starts low
+    assert abs(max(vals) - 1.0) < 0.01        # peak at lr
+    assert vals[-1] < 0.2                     # decays
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_token_stream_deterministic_and_resumable():
+    s = TokenStream(2, 16, 100, seed=3)
+    b1 = s.batch_at(7)
+    b2 = s.batch_at(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = s.batch_at(8)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_token_stream_learnable_structure():
+    """Labels are next-token shifted; bigram structure present."""
+    s = TokenStream(4, 32, 50, seed=0, structure=1.0)
+    b = s.batch_at(0)
+    toks, labels = np.asarray(b["tokens"]), np.asarray(b["labels"])
+    np.testing.assert_array_equal(labels[:, :-1], toks[:, 1:])
+
+
+def test_blog_feedback_shapes_and_split():
+    ds = BlogFeedback()
+    assert ds.X.shape == (60_021, 280)
+    X5, y5 = ds.client_shard(5, 50)
+    assert X5.shape[0] == 60_021 // 50
+
+
+def test_blog_feedback_ridge_is_strongly_convex():
+    """Assumption (7): γI ≼ ∇²F with γ = λ for the ridge loss."""
+    ds = BlogFeedback(num_samples=500)
+    loss = ridge_loss_fn(0.1)
+    X = jnp.asarray(ds.X[:200])
+    y = jnp.asarray(ds.y[:200])
+    H = jax.hessian(lambda w: loss(w, X, y))(jnp.zeros(280))
+    eig = np.linalg.eigvalsh(np.asarray(H))
+    assert eig.min() >= 0.1 - 1e-5
+
+
+@given(st.integers(2, 10), st.integers(0, 100))
+def test_iid_partition_covers_all(K, seed):
+    parts = iid_partition(100, K, seed)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(100))
+
+
+def test_dirichlet_partition_skew():
+    labels = np.repeat(np.arange(5), 100)
+    parts = dirichlet_partition(labels, 10, alpha=0.1, seed=0)
+    assert sum(len(p) for p in parts) == 500
+    assert min(len(p) for p in parts) >= 2
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+def test_topk_compression_and_error_feedback():
+    tree = {"g": jnp.asarray(np.random.default_rng(0).normal(size=1000), jnp.float32)}
+    sparse, err, bits = compression.compress_tree(tree, 0.1)
+    nz = int(jnp.sum(sparse["g"] != 0))
+    assert nz <= 110
+    # error feedback: sparse + error == original (lossless decomposition)
+    np.testing.assert_allclose(np.asarray(sparse["g"] + err["g"]),
+                               np.asarray(tree["g"]), rtol=1e-6)
+    assert bits < compression.dense_bits(tree)
+
+
+def test_int8_quantization_bounded_error():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=512), jnp.float32)
+    q, scale = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, scale)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.5 + 1e-6

@@ -1,0 +1,92 @@
+"""Hypothesis property tests on system invariants beyond FedAvg."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import FedsLLMConfig
+from repro.core import delay_model as dm
+from repro.core import resource_alloc as ra
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+@given(st.floats(0.01, 0.95), st.floats(0.01, 0.95))
+def test_latency_monotone_in_budget(eta1, eta2):
+    """The exact solver's T(η) is a well-defined function: same η -> same T."""
+    cfg = FedsLLMConfig(num_clients=4)
+    net = dm.sample_network(cfg, seed=0)
+    a1 = ra.solve_fixed_eta_exact(cfg, net, eta1)
+    a1b = ra.solve_fixed_eta_exact(cfg, net, eta1)
+    np.testing.assert_allclose(a1.T, a1b.T, rtol=1e-6)
+
+
+@given(st.integers(0, 50))
+def test_more_power_never_hurts(seed):
+    """T* is non-increasing in transmission power (paper Fig. 2 x-axis)."""
+    cfg = FedsLLMConfig(num_clients=4)
+    net_lo = dm.sample_network(cfg, seed=seed, p_max_dbm=0.0)
+    net_hi = dm.sample_network(cfg, seed=seed, p_max_dbm=20.0)
+    a_lo = ra.solve_fixed_eta_exact(cfg, net_lo, 0.1)
+    a_hi = ra.solve_fixed_eta_exact(cfg, net_hi, 0.1)
+    assert a_hi.T <= a_lo.T * 1.001
+
+
+@given(st.integers(0, 20))
+def test_bandwidth_budget_binds_at_optimum(seed):
+    """At the minimal T at least one bandwidth budget must bind — otherwise
+    T could still be reduced (complementary slackness of the min-max)."""
+    cfg = FedsLLMConfig(num_clients=6)
+    net = dm.sample_network(cfg, seed=seed)
+    a = ra.solve_fixed_eta_exact(cfg, net, 0.1)
+    if not a.feasible:
+        return
+    usage = max(a.b_c.sum() / net.B_c, a.b_s.sum() / net.B_s)
+    assert 0.9 <= usage <= 1.0 + 1e-6, usage
+
+
+@given(st.floats(0.05, 0.9), st.floats(1.2, 3.0))
+def test_lemma1_rounds_scale(eta, factor):
+    """I0 scales as 1/(1-η) exactly."""
+    cfg = FedsLLMConfig()
+    I1 = dm.global_rounds(cfg, eta)
+    eta2 = 1 - (1 - eta) / factor
+    I2 = dm.global_rounds(cfg, eta2)
+    np.testing.assert_allclose(I2 / I1, factor, rtol=1e-9)
+
+
+@given(st.integers(1, 6), st.integers(8, 64))
+def test_ssd_chunk_invariance(nheads, seq):
+    """Chunked SSD result is independent of chunk size (associativity)."""
+    from repro.models.mamba2 import ssd_chunked
+
+    seq = (seq // 8) * 8
+    B, H, P, N = 1, nheads, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, seq, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, seq, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.2)
+    Bm = jax.random.normal(ks[3], (B, seq, N)) * 0.4
+    Cm = jax.random.normal(ks[4], (B, seq, N)) * 0.4
+    y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    y2, s2 = ssd_chunked(x, dt, A, Bm, Cm, chunk=seq)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 30))
+def test_compression_preserves_sum_with_feedback(seed):
+    """Across two rounds, error feedback re-injects dropped mass."""
+    from repro.core import compression
+
+    rng = np.random.default_rng(seed)
+    g1 = {"w": jnp.asarray(rng.normal(size=100), jnp.float32)}
+    s1, e1, _ = compression.compress_tree(g1, 0.2)
+    g2 = {"w": jnp.asarray(rng.normal(size=100), jnp.float32)}
+    s2, e2, _ = compression.compress_tree(g2, 0.2, error=e1)
+    total_sent = np.asarray(s1["w"] + s2["w"])
+    total_true = np.asarray(g1["w"] + g2["w"])
+    # residual bounded by the remaining error memory
+    np.testing.assert_allclose(total_sent + np.asarray(e2["w"]), total_true, rtol=1e-5)

@@ -1,0 +1,109 @@
+"""Resource allocation (problems (16)/(17)): correctness of both solvers and
+the paper's Lemma 3 structural properties at the optimum."""
+
+import numpy as np
+import pytest
+
+from repro.config import FedsLLMConfig
+from repro.core import delay_model as dm
+from repro.core import resource_alloc as ra
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = FedsLLMConfig(num_clients=10)
+    net = dm.sample_network(cfg, seed=0)
+    return cfg, net
+
+
+def test_bandwidth_inversion_exact(setup):
+    cfg, net = setup
+    r_req = np.linspace(1e3, 2e5, net.K)
+    b = dm.bandwidth_for_rate(r_req, net.g_s, net.p_s_max, net.N0)
+    ok = np.isfinite(b)
+    back = dm.rate(b[ok], net.g_s[ok], net.p_s_max[ok], net.N0)
+    np.testing.assert_allclose(back, r_req[ok], rtol=1e-10)
+
+
+def test_rate_monotone_concave(setup):
+    cfg, net = setup
+    bs = np.linspace(1e3, 1e6, 200)
+    g = np.full_like(bs, net.g_s[0])
+    p = np.full_like(bs, net.p_s_max[0])
+    r = dm.rate(bs, g, p, net.N0)
+    d1 = np.diff(r)
+    assert np.all(d1 > 0), "rate must increase with bandwidth"
+    assert np.all(np.diff(d1) < 1e-6), "rate must be concave in bandwidth"
+
+
+def test_solution_satisfies_constraints(setup):
+    cfg, net = setup
+    a = ra.solve_fixed_eta_exact(cfg, net, 0.1)
+    assert a.feasible
+    # (17d)/(17e) bandwidth budgets
+    assert a.b_c.sum() <= net.B_c * (1 + 1e-6)
+    assert a.b_s.sum() <= net.B_s * (1 + 1e-6)
+    # (17b)/(17c) rate constraints
+    assert np.all(a.t_s * dm.rate(a.b_s, net.g_s, net.p_s_max, net.N0)
+                  >= cfg.s_bits * (1 - 1e-6))
+    assert np.all(a.t_c * dm.rate(a.b_c, net.g_c, net.p_c_max, net.N0)
+                  >= cfg.s_c_bits * (1 - 1e-6))
+    # (17a) latency
+    T_k = dm.round_latency(cfg, net, a.eta, a.A, a.t_c, a.t_s)
+    assert np.max(T_k) <= a.T * (1 + 1e-6)
+
+
+def test_lemma3_budget_tight_at_optimum(setup):
+    """Lemma 3 (eq. 19): t_c + V·t_s exactly exhausts each user's budget."""
+    cfg, net = setup
+    eta = 0.2
+    a = ra.solve_fixed_eta_exact(cfg, net, eta)
+    I0 = dm.global_rounds(cfg, eta)
+    V = dm.local_iters(cfg, eta)
+    R = a.T / I0 - dm.compute_time(cfg, net, eta, a.A)
+    np.testing.assert_allclose(a.t_c + V * a.t_s, R, rtol=1e-9)
+
+
+def test_lemma3_rate_equalities(setup):
+    """Lemma 3 (eqs. 20-21): rate constraints hold with equality."""
+    cfg, net = setup
+    a = ra.solve_fixed_eta_exact(cfg, net, 0.15)
+    np.testing.assert_allclose(
+        a.b_s * np.log2(1 + net.g_s * net.p_s_max / (net.N0 * a.b_s)),
+        cfg.s_bits / a.t_s, rtol=1e-9)
+    np.testing.assert_allclose(
+        a.b_c * np.log2(1 + net.g_c * net.p_c_max / (net.N0 * a.b_c)),
+        cfg.s_c_bits / a.t_c, rtol=1e-9)
+
+
+def test_exact_beats_or_matches_scipy(setup):
+    """The structured solver must find an optimum at least as good as the
+    fmincon-equivalent NLP (both solve the same convex problem)."""
+    cfg, net = setup
+    ex = ra.solve_fixed_eta_exact(cfg, net, 0.1)
+    sp = ra.solve_fixed_eta_scipy(cfg, net, 0.1)
+    assert ex.T <= sp.T * 1.01
+
+
+def test_paper_optimality_structure(setup):
+    """§III-E: f*=f_max, p*=p_max, A*=A_min are used by construction; check
+    latency is monotone in A (so A_min is indeed optimal)."""
+    cfg, net = setup
+    T = []
+    for A in [0.1, 0.3, 0.5]:
+        a = ra.solve_fixed_eta_exact(cfg, net, 0.1, A=A)
+        T.append(a.T)
+    assert T[0] <= T[1] <= T[2]
+
+
+def test_proposed_beats_baselines(setup):
+    cfg, net = setup
+    grid = np.arange(0.05, 1.0, 0.05)
+    prop = ra.optimize(cfg, net, "proposed", eta_grid=grid)
+    eb = ra.optimize(cfg, net, "EB", eta_grid=grid)
+    fe = ra.optimize(cfg, net, "FE")
+    ba = ra.optimize(cfg, net, "BA")
+    assert prop.T <= eb.T * 1.001
+    assert prop.T <= fe.T * 1.001
+    assert prop.T <= ba.T * 1.001
+    assert fe.T <= ba.T * 1.001  # optimising bandwidth can only help
