@@ -17,9 +17,9 @@ import time
 
 import numpy as np
 
+from repro.api import allocators
 from repro.config import FedsLLMConfig
 from repro.core import delay_model as dm
-from repro.core import resource_alloc as ra
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -32,10 +32,10 @@ def run(powers_dbm=(0.0, 5.0, 10.0, 15.0, 20.0), num_clients=50, seeds=(0,),
         for seed in seeds:
             net = dm.sample_network(cfg, seed=seed, p_max_dbm=p)
             t0 = time.time()
-            prop = ra.optimize(cfg, net, "proposed", eta_search=eta_search)
-            eb = ra.optimize(cfg, net, "EB")
-            fe = ra.optimize(cfg, net, "FE")
-            ba = ra.optimize(cfg, net, "BA")
+            prop = allocators.get("proposed")(cfg, net, eta_search=eta_search)
+            eb = allocators.get("EB")(cfg, net)
+            fe = allocators.get("FE")(cfg, net)
+            ba = allocators.get("BA")(cfg, net)
             row = dict(p_dbm=p, seed=seed, proposed=prop.T, EB=eb.T, FE=fe.T,
                        BA=ba.T, eta_star=prop.eta, solve_s=time.time() - t0)
             rows.append(row)

@@ -73,24 +73,26 @@ def bench_split_step():
 
 
 def bench_fedsllm_round():
-    from repro.config import FedsLLMConfig, LoRAConfig, get_arch, smoke_variant
-    from repro.core import fedsllm
+    from repro.api import Experiment
+    from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                              get_arch, smoke_variant)
     from repro.data.tokens import TokenStream, client_batches
 
     cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
-    fcfg = FedsLLMConfig(num_clients=8)
-    state, _ = fedsllm.init_state(cfg, 1)
-    round_fn = jax.jit(fedsllm.make_round_fn(cfg, fcfg, 1, eta=0.5))
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                        fedsllm=FedsLLMConfig(num_clients=8))
+    exp = Experiment.from_config(run_cfg, eta=0.5, cut=1, allocator="EB")
     stream = TokenStream(2, 64, cfg.vocab_size, seed=0)
     batches = client_batches(stream, 0, 8)
-    state, m = round_fn(state, batches)  # compile
-    jax.block_until_ready(state.lora_c)
+    res = exp.run_round(batches)  # compile
+    jax.block_until_ready(res.state.lora_c)
     t0 = time.perf_counter()
-    state, m = round_fn(state, batches)
-    jax.block_until_ready(state.lora_c)
+    res = exp.run_round(batches)
+    jax.block_until_ready(res.state.lora_c)
     us = (time.perf_counter() - t0) * 1e6
     emit("fedsllm_round_8clients", us,
-         f"loss={float(m['loss_round_start']):.3f}")
+         f"loss={float(res.metrics['loss_round_start']):.3f}_"
+         f"round_sim={res.wall_clock:.2f}s")
 
 
 def bench_kernels():

@@ -1,11 +1,12 @@
-"""End-to-end FedsLLM (the paper, in one script):
+"""End-to-end FedsLLM (the paper, in one script) via the unified API:
 
   1. sample the wireless network of §IV (50 users, 500 m cell, FDMA),
   2. run the delay-minimisation allocator (problem (17) + η sweep) to get
-     (T*, η*, b*, t*) — and the EB/FE/BA baselines for comparison,
-  3. fine-tune an LM with LoRA under the *split federated* Algorithm 1+2,
-     using η* to set the local-iteration count, and charge each global round
-     the simulated wireless wall-clock from the allocation,
+     (T*, η*, b*, t*) — and the EB/FE/BA baselines for comparison, each a
+     named strategy in the ``repro.api.allocators`` registry,
+  3. fine-tune an LM with LoRA under the *split federated* Algorithm 1+2
+     through one ``Experiment`` object, which charges each global round the
+     simulated wireless wall-clock from the allocation,
   4. report: convergence + simulated total training delay under each policy.
 
     PYTHONPATH=src python examples/fedsllm_end_to_end.py
@@ -13,13 +14,13 @@
 
 import time
 
-import jax
 import numpy as np
 
-from repro.config import FedsLLMConfig, LoRAConfig, get_arch, smoke_variant
+from repro.api import Experiment, allocators
+from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                          get_arch, smoke_variant)
 from repro.core import delay_model as dm
-from repro.core import fedsllm, resource_alloc as ra
-from repro.core.lora import lora_param_count
+from repro.core import fedsllm
 from repro.data.tokens import TokenStream, client_batches
 
 CLIENTS = 8  # cohort actually trained (of the K=50 simulated radio users)
@@ -30,39 +31,37 @@ def main():
     # --- model: LoRA-adapted small LM, split at A_min of the depth ---------
     cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
     fcfg = FedsLLMConfig(num_clients=50)
-    cut = max(1, int(round(fcfg.split_ratio_min * cfg.num_groups)))
-    print(f"model {cfg.name}: {cfg.num_groups} groups, cut at {cut} "
-          f"(A≈{cut/cfg.num_groups:.2f}), LoRA params {lora_param_count(cfg):,}")
 
-    # --- paper §IV wireless simulation + problem (17) ----------------------
+    # --- paper §IV wireless simulation + problem (17), every strategy ------
     net = dm.sample_network(fcfg, seed=0)
     alloc = {}
-    for strat in ("proposed", "EB", "FE", "BA"):
-        alloc[strat] = ra.optimize(fcfg, net, strat, eta_search="coarse")
+    for strat in allocators.names():  # BA / EB / FE / proposed
+        alloc[strat] = allocators.get(strat)(fcfg, net, eta_search="coarse")
         print(f"  {strat:9s}: T*={alloc[strat].T:10.1f}s  η={alloc[strat].eta:.2f}")
     best = alloc["proposed"]
     print(f"  reduction vs BA: {100*(1-best.T/alloc['BA'].T):.2f}% (paper avg: 47.63%)")
 
-    # --- split-fed training under η* ---------------------------------------
-    eta = float(best.eta)
-    state, _ = fedsllm.init_state(cfg, cut)
-    round_fn = jax.jit(fedsllm.make_round_fn(cfg, fcfg, cut, eta=min(eta, 0.5)))
-    stream = TokenStream(2, 64, cfg.vocab_size, seed=0)
-    timing = fedsllm.simulate_round_time(fcfg, net, best, eta)
-    round_wall = float(np.max(timing.total))
+    # --- split-fed training under η*, one Experiment (reusing the network
+    # realisation + allocation solved above — no second η sweep) ------------
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"], fedsllm=fcfg)
+    exp = Experiment.from_config(run_cfg, allocator="proposed", net=net, alloc=best)
+    print(exp.describe())
 
+    stream = TokenStream(2, 64, cfg.vocab_size, seed=0)
     simulated = 0.0
     t0 = time.time()
     for r in range(ROUNDS):
         batches = client_batches(stream, r, CLIENTS)
-        state, metrics = round_fn(state, batches)
-        simulated += round_wall
-        print(f"round {r}: loss {float(metrics['loss_round_start']):.4f} "
-              f"-> {float(metrics['loss_local_final']):.4f}   "
+        res = exp.run_round(batches)
+        simulated += res.wall_clock
+        print(f"round {r}: loss {float(res.metrics['loss_round_start']):.4f} "
+              f"-> {float(res.metrics['loss_local_final']):.4f}   "
               f"simulated wall-clock {simulated:9.1f}s", flush=True)
+    ba_round = float(np.max(
+        fedsllm.simulate_round_time(fcfg, net, alloc["BA"], 0.1).total))
     print(f"\n{ROUNDS} rounds in {time.time()-t0:.1f}s real, "
           f"{simulated:.1f}s simulated wireless time "
-          f"(BA policy would need {ROUNDS*float(np.max(fedsllm.simulate_round_time(fcfg, net, alloc['BA'], 0.1).total)):.1f}s)")
+          f"(BA policy would need {ROUNDS*ba_round:.1f}s)")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
-"""Quickstart: train a small decoder LM for a few steps and generate.
+"""Quickstart: train a small decoder LM for a few steps and generate, then
+run the same model through the unified FedsLLM ``Experiment`` API (split +
+federated + simulated wireless) in five lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,8 +8,10 @@
 import jax
 import jax.numpy as jnp
 
-from repro.config import TrainConfig, get_arch, smoke_variant
-from repro.data.tokens import TokenStream
+from repro.api import Experiment
+from repro.config import (FedsLLMConfig, RunConfig, SHAPES, TrainConfig,
+                          get_arch, smoke_variant)
+from repro.data.tokens import TokenStream, client_batches
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
 from repro.serving.decode import decode_tokens
@@ -38,6 +42,16 @@ def main():
     prompt = stream.batch_at(999)["tokens"][:2, :8]
     out = decode_tokens(params, cfg, prompt, max_new=8)
     print("generated:", out[0].tolist())
+
+    # --- the same model, federated + split, via the unified API ------------
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                        fedsllm=FedsLLMConfig(num_clients=4))
+    exp = Experiment.from_config(run_cfg, allocator="EB")
+    res = exp.run_round(client_batches(stream, 0, exp.cohort))
+    print(f"\nfederated round via Experiment: loss "
+          f"{float(res.metrics['loss_round_start']):.3f} -> "
+          f"{float(res.metrics['loss_local_final']):.3f}, "
+          f"simulated round wall-clock {res.wall_clock:.2f}s")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ reduced grid and show the Lemma-3 structure of the optimal solution.
 
 import numpy as np
 
+from repro.api import allocators
 from repro.config import FedsLLMConfig
 from repro.core import delay_model as dm
 from repro.core import resource_alloc as ra
@@ -17,10 +18,10 @@ def main():
     reductions = []
     for p_dbm in (0.0, 10.0, 20.0):
         net = dm.sample_network(cfg, seed=0, p_max_dbm=p_dbm)
-        prop = ra.optimize(cfg, net, "proposed", eta_search="coarse")
-        eb = ra.optimize(cfg, net, "EB")
-        fe = ra.optimize(cfg, net, "FE")
-        ba = ra.optimize(cfg, net, "BA")
+        prop = allocators.get("proposed")(cfg, net, eta_search="coarse")
+        eb = allocators.get("EB")(cfg, net)
+        fe = allocators.get("FE")(cfg, net)
+        ba = allocators.get("BA")(cfg, net)
         reductions.append(1 - prop.T / ba.T)
         print(f"{p_dbm:5.1f} {prop.T:9.1f} {eb.T:9.1f} {fe.T:9.1f} {ba.T:9.1f}"
               f"   {prop.eta:.2f}")

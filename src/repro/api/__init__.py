@@ -1,0 +1,44 @@
+"""Unified FedsLLM experiment API.
+
+One config-driven entry point replaces the loose function factories that
+every launcher, example and benchmark used to re-wire by hand:
+
+    from repro.api import Experiment
+    from repro.config import RunConfig, SHAPES, get_arch
+
+    run_cfg = RunConfig(model=get_arch("fedsllm-100m"), shape=SHAPES["train_4k"])
+    exp = Experiment.from_config(run_cfg)          # model+LoRA+split+channel+allocator
+    res = exp.run_round(batches)                   # one Algorithm-1+2 global round
+    res.metrics, res.timing.total                  # training + simulated wall-clock
+
+Three pluggable strategy axes, each a named registry (mirroring
+``config.register_arch`` — unknown names raise ``KeyError`` listing the
+known ones):
+
+  ``aggregators``  fed-server reduction: ``fedavg`` | ``weighted`` (D_k) |
+                   ``median`` | ``trimmed_mean``  (mask/straggler-aware)
+  ``allocators``   §IV delay-minimisation strategies: ``proposed`` | ``EB`` |
+                   ``FE`` | ``BA``
+  ``compressors``  smashed-activation uplink codecs: ``none`` | ``int8`` |
+                   ``randk`` | ``topk`` — the codec's ratio rescales the
+                   delay model's ``s`` bits and its quantisation error flows
+                   through training (straight-through; ``int8``/``randk``
+                   are the stable in-loop choices, see the module docstring)
+
+``core.fedsllm.make_round_fn`` remains as a deprecated shim over the same
+engine (``build_round_fn``) and produces bit-identical rounds; new code
+should construct an :class:`Experiment` instead.
+"""
+
+from repro.api.aggregators import aggregators, get_aggregator
+from repro.api.allocators import allocators, get_allocator
+from repro.api.compressors import Compressor, compressors, get_compressor
+from repro.api.experiment import Experiment, RoundResult
+from repro.api.registry import Registry
+
+__all__ = [
+    "Experiment", "RoundResult", "Registry",
+    "aggregators", "get_aggregator",
+    "allocators", "get_allocator",
+    "compressors", "get_compressor", "Compressor",
+]

@@ -1,0 +1,44 @@
+"""Aggregator registry — the fed-server reduction of Algorithm 1.
+
+Every aggregator has the uniform signature
+
+    aggregate(stacked, weights=None, mask=None) -> tree
+
+where ``stacked`` is a pytree with leaves ``(K, ...)``, ``weights`` is an
+optional ``(K,)`` array (e.g. client data sizes D_k for the paper's weighted
+FedAvg) and ``mask`` is an optional ``(K,)`` 0/1 survivor mask (straggler
+tolerance).  All entries are built on ``core.federated``'s pytree machinery.
+
+Registered strategies:
+  fedavg        uniform mean (paper Algorithm 1 as written; ignores weights)
+  weighted      D_k-weighted FedAvg (paper's data-size weighting)
+  median        coordinate-wise median, mask-aware (robust)
+  trimmed_mean  coordinate-wise β-trimmed mean, mask-aware (robust)
+"""
+
+from __future__ import annotations
+
+from repro.api.registry import Registry
+from repro.core import federated
+
+aggregators: Registry = Registry("aggregator")
+
+
+@aggregators.register("fedavg")
+def _fedavg_uniform(stacked, weights=None, mask=None):
+    """Uniform FedAvg — Algorithm 1's (1/K)·Σ, weights intentionally ignored."""
+    return federated.fedavg(stacked, mask=mask)
+
+
+@aggregators.register("weighted")
+def _fedavg_weighted(stacked, weights=None, mask=None):
+    """Data-size-weighted FedAvg: Σ D_k·h_k / Σ D_k (uniform if weights=None)."""
+    return federated.fedavg(stacked, weights=weights, mask=mask)
+
+
+aggregators.register("median")(federated.coordinate_median)
+aggregators.register("trimmed_mean")(federated.trimmed_mean)
+
+
+def get_aggregator(name: str):
+    return aggregators.get(name)

@@ -1,0 +1,173 @@
+"""`Experiment` — the one config-driven entry point for FedsLLM runs.
+
+Wires together, from a single frozen ``RunConfig``, everything the loose
+factories used to make every caller assemble by hand: model + LoRA init,
+the split cut, the jitted Algorithm-1+2 round function, the §IV wireless
+channel realisation, the delay-minimisation allocator, and the simulated
+round timing.  Strategy axes are pluggable by name through the registries
+in this package (``aggregators`` / ``allocators`` / ``compressors``).
+
+    exp = Experiment.from_config(run_cfg, allocator="proposed")
+    for r in range(rounds):
+        res = exp.run_round(client_batches(stream, r, exp.cohort))
+        print(res.metrics["loss_round_start"], res.timing.total.max())
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.aggregators import aggregators
+from repro.api.allocators import allocators
+from repro.api.compressors import Compressor, get_compressor
+from repro.config import (FedsLLMConfig, LoRAConfig, ModelConfig, RunConfig)
+from repro.core import delay_model as dm
+from repro.core import fedsllm
+from repro.core.fedsllm import FedsLLMState, RoundTiming
+from repro.core.resource_alloc import Allocation
+
+
+@dataclass
+class RoundResult:
+    """Everything one global round produces: new state, training metrics and
+    the simulated wireless wall-clock the round costs under the allocation."""
+
+    state: FedsLLMState
+    metrics: dict[str, Any]
+    timing: RoundTiming
+
+    @property
+    def wall_clock(self) -> float:
+        """Simulated per-round wireless wall-clock (slowest client), seconds."""
+        return float(np.max(self.timing.total))
+
+
+class Experiment:
+    """A fully-wired FedsLLM experiment (Algorithms 1+2 + problems (16)/(17)).
+
+    Build with :meth:`from_config`; drive with :meth:`run_round`.  The
+    instance owns the mutable training state; ``run_round`` advances it and
+    returns the :class:`RoundResult` (the returned state is also the new
+    ``exp.state``).
+    """
+
+    def __init__(self, cfg: ModelConfig, fcfg: FedsLLMConfig, *,
+                 cut: Optional[int] = None, eta: Optional[float] = None,
+                 aggregator: str = "weighted", allocator: str = "proposed",
+                 compressor: str = "none", compressor_kw: Optional[dict] = None,
+                 seed: int = 0, remat: bool = False, dp_clip: float = 0.0,
+                 dp_noise: float = 0.0, eta_search: str = "coarse",
+                 lora_rank: int = 8, key: Optional[jax.Array] = None,
+                 net: Optional[dm.Network] = None,
+                 alloc: Optional[Allocation] = None):
+        if cfg.lora is None:
+            cfg = cfg.replace(lora=LoRAConfig(rank=lora_rank))
+        self.cfg = cfg
+        self.cut = (max(1, int(round(fcfg.split_ratio_min * cfg.num_groups)))
+                    if cut is None else cut)
+
+        # --- strategy lookups (fail fast, with the known names) -------------
+        self.aggregator_name = aggregator
+        self.allocator_name = allocator
+        self.compressor_name = compressor
+        aggregate = aggregators.get(aggregator)
+        allocate = allocators.get(allocator)
+        self.compressor: Compressor = get_compressor(compressor,
+                                                     **(compressor_kw or {}))
+
+        # --- channel + allocation: the codec's uplink ratio rescales the
+        # paper's s bits before the allocator prices the round.  A caller who
+        # already sampled/solved (e.g. to compare strategies) can pass its
+        # ``net``/``alloc`` to skip the re-solve. ----------------------------
+        self.fcfg = dataclasses.replace(
+            fcfg, s_bits=fcfg.s_bits * self.compressor.ratio)
+        self.net = dm.sample_network(self.fcfg, seed=seed) if net is None else net
+        self.alloc: Allocation = (allocate(self.fcfg, self.net,
+                                           eta_search=eta_search)
+                                  if alloc is None else alloc)
+        # η* prices the allocation; the training η is clamped so Lemma 2
+        # still yields a non-trivial local-iteration count
+        self.eta = min(float(self.alloc.eta), 0.5) if eta is None else float(eta)
+        # per-round wall-clock at the η the rounds actually train with
+        # (I0/V/τ recomputed at self.eta; t_c/t_s from the allocation)
+        self.timing: RoundTiming = fedsllm.simulate_round_time(
+            self.fcfg, self.net, self.alloc, self.eta)
+
+        # --- model + split + jitted round function --------------------------
+        key = jax.random.PRNGKey(seed) if key is None else key
+        self.state, self._axes = fedsllm.init_state(cfg, self.cut, key=key)
+        self._round_fn = jax.jit(fedsllm.build_round_fn(
+            cfg, self.fcfg, self.cut, self.eta, remat=remat, dp_clip=dp_clip,
+            dp_noise=dp_noise, aggregator=aggregate,
+            compressor=(None if compressor == "none" else self.compressor)))
+
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, run_cfg: RunConfig, **overrides) -> "Experiment":
+        """Wire an experiment from a frozen :class:`RunConfig`.
+
+        ``run_cfg.model`` supplies the architecture (a default LoRA config is
+        attached if absent), ``run_cfg.fedsllm`` the §IV system model (paper
+        defaults if absent) and ``run_cfg.train.seed`` the seed.
+        ``run_cfg.shape`` is *not* consumed here: batch geometry comes from
+        the ``batches`` pytree handed to :meth:`run_round` (shape configs
+        drive the data-stream construction at call sites).  Keyword
+        ``overrides`` go to ``__init__`` (e.g. ``aggregator="median"``;
+        ``remat=True`` is an explicit opt-in, not inherited from
+        ``train.remat``, so the round stays bit-identical to the shim path).
+        """
+        fcfg = run_cfg.fedsllm if run_cfg.fedsllm is not None else FedsLLMConfig()
+        overrides.setdefault("seed", run_cfg.train.seed)
+        return cls(run_cfg.model, fcfg, **overrides)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def cohort(self) -> int:
+        """Clients trained per round (= the simulated radio population K)."""
+        return self.fcfg.num_clients
+
+    @property
+    def round_fn(self):
+        """The underlying jitted round function (for benchmarking/inspection)."""
+        return self._round_fn
+
+    @property
+    def wall_clock_per_round(self) -> float:
+        """Simulated wireless wall-clock of one global round (slowest client,
+        seconds), at the η the rounds actually train with."""
+        return float(np.max(self.timing.total))
+
+    def client_weights(self, num_clients: int) -> jax.Array:
+        """Aggregation weights D_k for a cohort of the first ``num_clients``
+        simulated users (the paper's data-size-weighted FedAvg)."""
+        return jnp.asarray(self.net.D_k[:num_clients], jnp.float32)
+
+    def run_round(self, batches, key: Optional[jax.Array] = None,
+                  mask: Optional[jax.Array] = None) -> RoundResult:
+        """One global round: train (Algorithms 1+2) + simulated wall-clock.
+
+        ``batches``: pytree with leaves stacked ``(C, ...)``, one slice per
+        cohort client.  ``mask``: optional ``(C,)`` survivor mask.
+        """
+        C = jax.tree.leaves(batches)[0].shape[0]
+        self.state, metrics = self._round_fn(self.state, batches, mask, key,
+                                             self.client_weights(C))
+        return RoundResult(self.state, metrics, self.timing)
+
+    def describe(self) -> str:
+        from repro.core.lora import lora_param_count
+
+        return (f"Experiment[{self.cfg.name}] cut={self.cut}/{self.cfg.num_groups} "
+                f"lora={lora_param_count(self.cfg)/1e6:.2f}M "
+                f"agg={self.aggregator_name} alloc={self.allocator_name} "
+                f"codec={self.compressor_name} "
+                f"T*={self.alloc.T:.1f}s η*={self.alloc.eta:.2f} "
+                f"round={float(np.max(self.timing.total)):.2f}s")

@@ -43,6 +43,68 @@ def fedavg(stacked, weights: Optional[jax.Array] = None, mask: Optional[jax.Arra
     return jax.tree.map(one, stacked)
 
 
+def _client_weight_mask(leaves, mask):
+    """(K,) float mask broadcastable against each leaf of a stacked tree."""
+    K = leaves[0].shape[0]
+    m = jnp.ones(K, jnp.float32) if mask is None else mask.astype(jnp.float32)
+    return K, m
+
+
+def coordinate_median(stacked, weights: Optional[jax.Array] = None,
+                      mask: Optional[jax.Array] = None):
+    """Coordinate-wise median over the client axis (robust aggregation).
+
+    Straggler-aware: masked-out clients are excluded from every coordinate's
+    order statistic (NaN-dropped), not just down-weighted.  ``weights`` is
+    accepted for aggregator-signature uniformity but ignored — the median is
+    an unweighted order statistic (Yin et al. 2018)."""
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return stacked
+    K, m = _client_weight_mask(leaves, mask)
+
+    def one(x):
+        xf = x.astype(jnp.float32)
+        if mask is not None:
+            mb = m.reshape((K,) + (1,) * (x.ndim - 1)) > 0
+            xf = jnp.where(mb, xf, jnp.nan)
+            return jnp.nanmedian(xf, axis=0).astype(x.dtype)
+        return jnp.median(xf, axis=0).astype(x.dtype)
+
+    return jax.tree.map(one, stacked)
+
+
+def trimmed_mean(stacked, weights: Optional[jax.Array] = None,
+                 mask: Optional[jax.Array] = None, trim: float = 0.2):
+    """Coordinate-wise β-trimmed mean: drop the ⌊β·K⌋ largest and smallest
+    values per coordinate, average the rest (robust to Byzantine/straggling
+    outliers; Yin et al. 2018).
+
+    Straggler-aware: masked-out clients are first replaced per-coordinate by
+    the survivor mean so they occupy neither tail of the order statistic.
+    ``weights`` is accepted for signature uniformity but ignored."""
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return stacked
+    K, m = _client_weight_mask(leaves, mask)
+    # static — K is the stacked client dim; trim at least one value per tail
+    # when the cohort allows it, never more than keeps one survivor
+    k_trim = min(int(np.ceil(trim * K)), (K - 1) // 2)
+
+    def one(x):
+        xf = x.astype(jnp.float32)
+        if mask is not None:
+            mb = m.reshape((K,) + (1,) * (x.ndim - 1))
+            denom = jnp.maximum(jnp.sum(m), 1.0)
+            surv_mean = jnp.sum(xf * mb, axis=0, keepdims=True) / denom
+            xf = jnp.where(mb > 0, xf, surv_mean)
+        xs = jnp.sort(xf, axis=0)
+        kept = xs[k_trim: K - k_trim] if k_trim else xs
+        return jnp.mean(kept, axis=0).astype(x.dtype)
+
+    return jax.tree.map(one, stacked)
+
+
 def apply_update(global_tree, avg_h, scale: float = 1.0):
     """Δw ← Δw + scale·mean_k h_k (Algorithm 1 update)."""
     return jax.tree.map(

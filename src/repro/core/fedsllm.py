@@ -63,15 +63,24 @@ def global_round_count(fcfg: FedsLLMConfig, eta: float) -> int:
     return max(1, int(math.ceil(dm.lemma_a(fcfg) / (1.0 - eta))))
 
 
-def make_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
-                  xi: Optional[float] = None, delta: Optional[float] = None,
-                  remat: bool = False, dp_clip: float = 0.0,
-                  dp_noise: float = 0.0) -> Callable:
-    """Build the jittable global-round function.
+def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
+                   xi: Optional[float] = None, delta: Optional[float] = None,
+                   remat: bool = False, dp_clip: float = 0.0,
+                   dp_noise: float = 0.0, aggregator: Optional[Callable] = None,
+                   compressor=None) -> Callable:
+    """Build the jittable global-round function (the `repro.api` engine).
 
-    round_fn(state, batches, mask, key) -> (state', metrics)
+    round_fn(state, batches, mask=None, key=None, weights=None)
+        -> (state', metrics)
     batches: pytree with leaves stacked (K, ...) — one micro-dataset/client.
     mask: (K,) survivors (straggler tolerance), or None.
+    weights: (K,) aggregation weights, e.g. data sizes D_k (paper's weighted
+    FedAvg); None = uniform.
+    aggregator: callable (stacked, weights=None, mask=None) -> tree; default
+    ``federated.fedavg``.  Applied to both the round-start gradient average ḡ
+    and the uploaded update average (Algorithm 1's fed-server reduction).
+    compressor: optional ``repro.api.compressors.Compressor`` applied to the
+    smashed activations on the client→server uplink (straight-through).
     dp_clip/dp_noise: per-client L2 clip + Gaussian noise multiplier on the
     uploaded updates (DP-FedAvg; the paper's noise-layer counterpart at the
     fed-server uplink). 0 disables.
@@ -79,10 +88,12 @@ def make_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
     xi = fcfg.xi if xi is None else xi
     delta = fcfg.delta if delta is None else delta
     I_loc = local_iteration_count(fcfg, eta)
+    aggregate = federated.fedavg if aggregator is None else aggregator
 
     def client_grads(base, lc, ls, batch):
         loss, dc, ds, _ = split.split_value_and_grad(base, lc, ls, batch, cfg, cut,
-                                                     remat=remat)
+                                                     remat=remat,
+                                                     compressor=compressor)
         return loss, (dc, ds)
 
     def one_client_round(base, lc0, ls0, gk0, gbar, batch):
@@ -108,13 +119,14 @@ def make_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
         h, losses = jax.lax.scan(body, h0, None, length=I_loc)
         return h[0], h[1], losses[-1]
 
-    def round_fn(state: FedsLLMState, batches, mask=None, key=None):
+    def round_fn(state: FedsLLMState, batches, mask=None, key=None, weights=None):
         K = jax.tree.leaves(batches)[0].shape[0]
         # 2. round-start gradients per client (h=0)
         loss0, g0 = jax.vmap(lambda b: client_grads(state.base, state.lora_c,
                                                     state.lora_s, b))(batches)
         # ḡ = ∇F(Δw) — fed-server aggregation (paper: uplink s_c per client)
-        gbar = (federated.fedavg(g0[0], mask=mask), federated.fedavg(g0[1], mask=mask))
+        gbar = (aggregate(g0[0], weights=weights, mask=mask),
+                aggregate(g0[1], weights=weights, mask=mask))
 
         # 3. local iterations (vmapped over clients)
         h_c, h_s, last_loss = jax.vmap(
@@ -131,16 +143,36 @@ def make_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
                                                  noise_multiplier=dp_noise)
 
         # 4. aggregate + update (fed server for Δw_c, main server for Δw_s)
-        new_lc = federated.apply_update(state.lora_c, federated.fedavg(h_c, mask=mask))
-        new_ls = federated.apply_update(state.lora_s, federated.fedavg(h_s, mask=mask))
+        new_lc = federated.apply_update(state.lora_c,
+                                        aggregate(h_c, weights=weights, mask=mask))
+        new_ls = federated.apply_update(state.lora_s,
+                                        aggregate(h_s, weights=weights, mask=mask))
         metrics = {
             "loss_round_start": jnp.mean(loss0),
             "loss_local_final": jnp.mean(last_loss),
-            "h_c_norm": lora_lib.delta_norm(h_c) if isinstance(h_c, dict) else jnp.zeros(()),
+            # vmapped LoRA pytrees keep their dict structure, so delta_norm
+            # applies directly to the stacked (K, ...) updates
+            "h_c_norm": lora_lib.delta_norm(h_c),
         }
         return FedsLLMState(state.base, new_lc, new_ls, state.round + 1), metrics
 
     return round_fn
+
+
+def make_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
+                  xi: Optional[float] = None, delta: Optional[float] = None,
+                  remat: bool = False, dp_clip: float = 0.0,
+                  dp_noise: float = 0.0) -> Callable:
+    """Deprecated shim over :func:`build_round_fn`.
+
+    Prefer ``repro.api.Experiment`` (see ROADMAP.md "Quickstart (new API)"),
+    which wires this round function together with the channel model and the
+    resource allocator.  Kept so pre-`Experiment` call sites stay bit-exact:
+    the returned function is ``build_round_fn`` with the default uniform
+    ``federated.fedavg`` aggregator and no uplink compression.
+    """
+    return build_round_fn(cfg, fcfg, cut, eta, xi=xi, delta=delta, remat=remat,
+                          dp_clip=dp_clip, dp_noise=dp_noise)
 
 
 # ---------------------------------------------------------------------------

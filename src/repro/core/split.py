@@ -67,14 +67,28 @@ def server_forward_loss(server_base, lora_s, acts, batch, cfg: ModelConfig, *,
 
 
 def split_value_and_grad(params, lora_c, lora_s, batch, cfg: ModelConfig, cut: int,
-                         remat: bool = False):
-    """Algorithm-2 message flow. Returns (loss, dlora_c, dlora_s, info)."""
+                         remat: bool = False, compressor=None):
+    """Algorithm-2 message flow. Returns (loss, dlora_c, dlora_s, info).
+
+    ``compressor`` (see ``repro.api.compressors``) is applied to the smashed
+    activations on the client→server uplink, *outside* the client vjp: the
+    server differentiates w.r.t. the compressed activations and the resulting
+    dA_k flows straight through the codec back into the client backward pass
+    (standard straight-through split learning).  ``info`` reports the exact
+    per-trace compressed uplink volume for diagnostics; the delay model's
+    ``s`` bits are rescaled by the codec's nominal ratio up front, in
+    ``repro.api.Experiment`` (the allocator runs before any batch exists).
+    """
     parts = slice_base(params, cut)
 
     def client_fn(lc):
         return client_forward(parts.client_base, lc, batch, cfg, remat=remat)
 
     (acts, enc_out), client_vjp = jax.vjp(client_fn, lora_c)
+    if compressor is not None:
+        acts = compressor.apply(acts)
+        if enc_out is not None:  # encdec: the encoder output is uplink too
+            enc_out = compressor.apply(enc_out)
 
     if enc_out is not None:  # encdec: encoder output is also smashed data
         def server_fn(ls, a, eo):
@@ -92,8 +106,12 @@ def split_value_and_grad(params, lora_c, lora_s, batch, cfg: ModelConfig, cut: i
         loss, (dlora_s, dacts) = jax.value_and_grad(server_fn, argnums=(0, 1))(lora_s, acts)
         # gradient of smashed data returns to the client (the paper's dA_k)
         (dlora_c,) = client_vjp((dacts, None))
+    uplink_elems = acts.size + (enc_out.size if enc_out is not None else 0)
+    smashed_bits = (uplink_elems * acts.dtype.itemsize * 8 if compressor is None
+                    else compressor.bits(uplink_elems, acts.dtype.itemsize * 8))
     info = {
-        "smashed_bytes": acts.size * acts.dtype.itemsize,
+        "smashed_bytes": uplink_elems * acts.dtype.itemsize,
+        "smashed_bits_uplink": smashed_bits,
         "grad_bytes": dacts.size * dacts.dtype.itemsize,
     }
     return loss, dlora_c, dlora_s, info

@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.config import FedsLLMConfig, TrainConfig, get_arch, smoke_variant
@@ -68,41 +67,39 @@ def train_standard(args):
 
 
 def train_fedsllm(args):
-    """Paper mode: LoRA + split + federated rounds with simulated wireless."""
-    from repro.core import delay_model as dm
-    from repro.core import fedsllm, resource_alloc as ra
+    """Paper mode: LoRA + split + federated rounds with simulated wireless.
+
+    One ``Experiment`` wires model init, the split cut, the jitted round
+    function, the §IV channel model and the delay-minimisation allocator;
+    the strategy axes are selected by name (--aggregator/--allocator/--codec).
+    """
+    from repro.api import Experiment
+    from repro.config import RunConfig, ShapeConfig
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
-    if cfg.lora is None:
-        from repro.config import LoRAConfig
-        cfg = cfg.replace(lora=LoRAConfig(rank=args.lora_rank))
-    fcfg = FedsLLMConfig(num_clients=args.clients)
-    cut = max(1, int(round(fcfg.split_ratio_min * cfg.num_groups)))
-
-    state, _ = fedsllm.init_state(cfg, cut)
-    round_fn = jax.jit(fedsllm.make_round_fn(cfg, fcfg, cut, args.eta))
-
-    # wireless simulation + optimal allocation (the paper's optimizer)
-    net = dm.sample_network(fcfg, seed=0)
-    from repro.core.lora import lora_param_count
-    n_trainable = lora_param_count(cfg)
-    alloc = ra.optimize(fcfg, net, "proposed", eta_search="coarse")
-    timing = fedsllm.simulate_round_time(fcfg, net, alloc, alloc.eta)
-    print(f"allocator: T*={alloc.T:.1f}s eta*={alloc.eta:.2f} "
-          f"round wall-clock={np.max(timing.total):.2f}s "
-          f"(LoRA params={n_trainable/1e6:.2f}M, cut={cut}/{cfg.num_groups})")
+    run_cfg = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("cli", "train", args.seq, args.batch),
+        fedsllm=FedsLLMConfig(num_clients=args.clients),
+    )
+    exp = Experiment.from_config(run_cfg, eta=args.eta, lora_rank=args.lora_rank,
+                                 aggregator=args.aggregator,
+                                 allocator=args.allocator, compressor=args.codec)
+    print(exp.describe())
 
     stream = TokenStream(args.batch, args.seq, cfg.vocab_size, seed=0)
     t0 = time.time()
+    simulated = 0.0
     for r in range(args.rounds):
         batches = client_batches(stream, r, args.clients)
-        state, metrics = round_fn(state, batches)
-        print(f"round {r:3d}  loss_start {float(metrics['loss_round_start']):.4f}"
-              f"  loss_local_end {float(metrics['loss_local_final']):.4f}"
-              f"  ({time.time()-t0:.1f}s)", flush=True)
-    return state
+        res = exp.run_round(batches)
+        simulated += res.wall_clock
+        print(f"round {r:3d}  loss_start {float(res.metrics['loss_round_start']):.4f}"
+              f"  loss_local_end {float(res.metrics['loss_local_final']):.4f}"
+              f"  simulated {simulated:9.1f}s  ({time.time()-t0:.1f}s)", flush=True)
+    return exp.state
 
 
 def main():
@@ -123,6 +120,12 @@ def main():
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--lora-rank", type=int, default=8)
+    ap.add_argument("--aggregator", default="weighted",
+                    help="fed-server reduction (repro.api.aggregators)")
+    ap.add_argument("--allocator", default="proposed",
+                    help="resource-allocation strategy (repro.api.allocators)")
+    ap.add_argument("--codec", default="none",
+                    help="smashed-activation uplink codec (repro.api.compressors)")
     args = ap.parse_args()
     if args.fedsllm:
         train_fedsllm(args)

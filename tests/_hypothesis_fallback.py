@@ -1,0 +1,129 @@
+"""Minimal drop-in for the ``hypothesis`` API surface this suite uses.
+
+The offline test container cannot install extras, so when the real
+``hypothesis`` is absent ``conftest.py`` registers this module (and
+sub-module ``strategies``) in ``sys.modules`` *before* test collection.
+Property tests then run as seeded random sampling: each ``@given`` test is
+executed ``max_examples`` times with boundary values first (lo/hi corners),
+then deterministic pseudo-random draws.  No shrinking, no database — the
+real hypothesis (installed via ``pip install -e .[test]``, see
+pyproject.toml) takes precedence whenever importable.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw, corners=()):
+        self._draw = draw
+        self.corners = tuple(corners)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     corners=(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, allow_nan: bool = False,
+           width: int = 64, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     corners=(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements._draw(rng) for _ in range(n)]
+
+    corner = [elements.corners[0] if elements.corners else elements._draw(random.Random(0))
+              ] * max(min_size, 1)
+    return _Strategy(draw, corners=(corner,))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                     corners=(seq[0], seq[-1]))
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' public name
+    _profiles: dict[str, dict] = {"default": {"max_examples": 20}}
+    _current: dict = _profiles["default"]
+
+    def __init__(self, **kw):
+        self._kw = kw
+
+    def __call__(self, fn):  # used as @settings(...) decorator
+        fn._fallback_settings = self._kw
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kw):
+        cls._profiles[name] = {"max_examples": kw.get("max_examples", 20)}
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._current = cls._profiles.get(name, cls._profiles["default"])
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            opts = dict(settings._current)
+            opts.update(getattr(fn, "_fallback_settings", {}))
+            max_examples = int(opts.get("max_examples", 20))
+            strats = list(strategies) + list(kw_strategies.values())
+            names = list(kw_strategies)
+            # boundary examples first (all-lo, all-hi), then random draws
+            corner_rows = []
+            if all(s.corners for s in strats):
+                corner_rows = [[s.corners[0] for s in strats],
+                               [s.corners[-1] for s in strats]]
+            rng = random.Random(0xFED5)
+            for ex in itertools.count():
+                if ex >= max_examples:
+                    break
+                if ex < len(corner_rows):
+                    vals = corner_rows[ex]
+                else:
+                    vals = [s._draw(rng) for s in strats]
+                pos = vals[: len(strategies)]
+                kws = dict(zip(names, vals[len(strategies):]))
+                try:
+                    fn(*args, *pos, **kwargs, **kws)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback sampler, example {ex}): "
+                        f"{fn.__name__}({pos}, {kws})") from e
+
+        # pytest must not mistake the drawn parameters for fixtures: hide the
+        # wrapped signature (the real hypothesis does the same)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Register this module as ``hypothesis`` (+``hypothesis.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    mod.__is_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat
+    return mod

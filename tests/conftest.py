@@ -4,6 +4,16 @@ import os
 # dry-run, forces 512 placeholder devices).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Property tests prefer the real hypothesis (pip install -e .[test]); in
+# offline containers without it, fall back to the seeded sampler so the five
+# hypothesis-based modules still collect and run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
 import jax
 
 jax.config.update("jax_enable_x64", False)

@@ -60,10 +60,11 @@ def test_elastic_restore_with_shardings(tmp_path):
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.mesh import make_mesh
+
     ck = Checkpointer(str(tmp_path))
     ck.save(1, tree(3.0))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = {"a": NamedSharding(mesh, P()), "b": {"c": NamedSharding(mesh, P())}}
     restored, _ = ck.restore(shardings=sh)
     np.testing.assert_allclose(np.asarray(restored["a"]), 3.0)

@@ -6,16 +6,14 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import RULESETS, spec_for
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_abstract_mesh, make_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh():
     # 1 real device but spec_for math only needs the mesh SHAPE semantics;
-    # build a virtual mesh via abstract mesh when possible, else 1x1.
-    from jax.sharding import AbstractMesh
-
-    return AbstractMesh((16, 16), ("data", "model"))
+    # make_abstract_mesh spans the AbstractMesh API change across jax versions
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_divisible_dims_get_sharded(mesh):
@@ -51,17 +49,13 @@ def test_pod_axis_dropped_on_single_pod(mesh):
 
 
 def test_multi_pod_batch_uses_both():
-    from jax.sharding import AbstractMesh
-
-    mesh3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     spec = spec_for((256, 4096), ("batch", "seq"), RULESETS["train"], mesh3)
     assert spec[0] == ("pod", "data")
 
 
 def test_decode_rules_shard_kv_seq():
-    from jax.sharding import AbstractMesh
-
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     spec = spec_for((128, 32768, 8, 128), ("batch", "kv_seq", "kv_heads", None),
                     RULESETS["decode"], mesh)
     assert spec[0] == "data"
