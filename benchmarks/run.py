@@ -1,19 +1,25 @@
 """Benchmark harness — one entry per paper table/figure + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the headline number
-each benchmark exists to produce, e.g. Fig.2's %-reduction).
+each benchmark exists to produce, e.g. Fig.2's %-reduction) and mirrors the
+run machine-readably to ``results/BENCH_round.json`` (name →
+{us_per_call, derived}) so the perf trajectory is diffable across PRs.
 
   fig2_delay      paper Fig. 2 (delay vs power, 4 strategies)  [the paper's
                   only results artifact]
   solver          exact Lemma-3 solver vs fmincon-equivalent NLP
   split_step      split-learning step vs monolithic autodiff (must match)
   fedsllm_round   one full Algorithm-1+2 global round (8 clients)
+  campaign        multi-round campaign engine (resampled channels, elastic
+                  cohort, deadline stragglers; must stay at 1 jit trace)
   kernels         lora / attention / ssd micro-benches
   roofline        summary over dry-run artifacts (if present)
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -21,12 +27,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "results")
+
 ROWS: list[tuple[str, float, str]] = []
 
 
 def emit(name: str, us: float, derived: str):
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def write_json(path: str = os.path.join(RESULTS_DIR, "BENCH_round.json")):
+    """Machine-readable mirror of the CSV rows emitted this run.
+
+    Merged into the existing file (a subset invocation like ``run.py
+    campaign`` must refresh its own entries, not clobber the others)."""
+    if not ROWS:
+        return
+    table: dict = {}
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        pass
+    table.update({name: {"us_per_call": round(us, 1), "derived": derived}
+                  for name, us, derived in ROWS})
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+    print(f"# wrote {os.path.relpath(path)} ({len(ROWS)}/{len(table)} entries "
+          f"refreshed)", flush=True)
 
 
 def bench_fig2():
@@ -93,6 +124,33 @@ def bench_fedsllm_round():
     emit("fedsllm_round_8clients", us,
          f"loss={float(res.metrics['loss_round_start']):.3f}_"
          f"round_sim={res.wall_clock:.2f}s")
+
+
+def bench_campaign():
+    """Experiment.run: N resampled-channel rounds through one jit trace."""
+    from repro.api import Experiment
+    from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                              get_arch, smoke_variant)
+    from repro.data.tokens import TokenStream
+
+    cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                        fedsllm=FedsLLMConfig(num_clients=8))
+    exp = Experiment.from_config(run_cfg, eta=0.5, cut=1, allocator="EB")
+    stream = TokenStream(2, 64, cfg.vocab_size, seed=0)
+    # deadline at the 75th percentile of the round-0 delays: slow clients
+    # under later fades become stragglers instead of stretching the round
+    deadline = float(np.quantile(exp.timing.total, 0.75))
+    exp.run(num_rounds=1, stream=stream, cohort=4, deadline=deadline)  # compile
+    t0 = time.perf_counter()
+    # rounds are absolute: this continues at round 1 and runs two more
+    res = exp.run(num_rounds=3, stream=stream, cohort=4, deadline=deadline,
+                  resample_channel=True)
+    jax.block_until_ready(res.state.lora_c)
+    us = (time.perf_counter() - t0) / res.num_rounds * 1e6
+    emit("campaign_round_8users_cohort4", us,
+         f"traces={exp.trace_count}_stragglers={res.straggler_rate:.2f}_"
+         f"sim={res.total_time:.1f}s")
 
 
 def bench_kernels():
@@ -164,6 +222,8 @@ def main() -> None:
         bench_split_step()
     if which in ("all", "round"):
         bench_fedsllm_round()
+    if which in ("all", "campaign"):
+        bench_campaign()
     if which in ("all", "kernels"):
         bench_kernels()
     if which in ("all", "pipeline"):
@@ -174,6 +234,7 @@ def main() -> None:
         bench_fig2()
     if which in ("all", "roofline"):
         bench_roofline()
+    write_json()
 
 
 if __name__ == "__main__":

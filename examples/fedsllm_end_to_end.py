@@ -4,9 +4,10 @@
   2. run the delay-minimisation allocator (problem (17) + η sweep) to get
      (T*, η*, b*, t*) — and the EB/FE/BA baselines for comparison, each a
      named strategy in the ``repro.api.allocators`` registry,
-  3. fine-tune an LM with LoRA under the *split federated* Algorithm 1+2
-     through one ``Experiment`` object, which charges each global round the
-     simulated wireless wall-clock from the allocation,
+  3. run a *multi-round campaign* (``Experiment.run``): per-round block-fading
+     channel re-draws, an elastic 8-of-50 cohort, and a round deadline that
+     turns slow realisations into masked-out stragglers — the fed server
+     aggregates survivors only (Algorithm 1's masked reduction),
   4. report: convergence + simulated total training delay under each policy.
 
     PYTHONPATH=src python examples/fedsllm_end_to_end.py
@@ -21,9 +22,9 @@ from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
                           get_arch, smoke_variant)
 from repro.core import delay_model as dm
 from repro.core import fedsllm
-from repro.data.tokens import TokenStream, client_batches
+from repro.data.tokens import TokenStream
 
-CLIENTS = 8  # cohort actually trained (of the K=50 simulated radio users)
+COHORT = 8  # clients trained per round (of the K=50 simulated radio users)
 ROUNDS = 8
 
 
@@ -41,26 +42,34 @@ def main():
     best = alloc["proposed"]
     print(f"  reduction vs BA: {100*(1-best.T/alloc['BA'].T):.2f}% (paper avg: 47.63%)")
 
-    # --- split-fed training under η*, one Experiment (reusing the network
-    # realisation + allocation solved above — no second η sweep) ------------
+    # --- multi-round campaign under η*, one Experiment (reusing the network
+    # realisation + allocation solved above — no second η sweep).  Rounds
+    # re-draw the channel (block fading); the stale allocation is re-priced
+    # under each draw, and clients missing the deadline are masked out. -----
     run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"], fedsllm=fcfg)
     exp = Experiment.from_config(run_cfg, allocator="proposed", net=net, alloc=best)
     print(exp.describe())
+    deadline = float(np.quantile(exp.timing.total, 0.8))  # cuts slowest ~20%
 
     stream = TokenStream(2, 64, cfg.vocab_size, seed=0)
-    simulated = 0.0
     t0 = time.time()
-    for r in range(ROUNDS):
-        batches = client_batches(stream, r, CLIENTS)
-        res = exp.run_round(batches)
-        simulated += res.wall_clock
-        print(f"round {r}: loss {float(res.metrics['loss_round_start']):.4f} "
-              f"-> {float(res.metrics['loss_local_final']):.4f}   "
-              f"simulated wall-clock {simulated:9.1f}s", flush=True)
+
+    def log(rec):
+        print(f"round {rec.round}: cohort {rec.client_ids.tolist()} "
+              f"survivors {rec.survivors}/{rec.cohort_size}  "
+              f"loss {rec.metrics['loss_round_start']:.4f} "
+              f"-> {rec.metrics['loss_local_final']:.4f}   "
+              f"simulated wall-clock {rec.cumulative_time:9.1f}s", flush=True)
+
+    res = exp.run(num_rounds=ROUNDS, stream=stream, cohort=COHORT,
+                  deadline=deadline, resample_channel=True, on_round=log)
+
     ba_round = float(np.max(
         fedsllm.simulate_round_time(fcfg, net, alloc["BA"], 0.1).total))
-    print(f"\n{ROUNDS} rounds in {time.time()-t0:.1f}s real, "
-          f"{simulated:.1f}s simulated wireless time "
+    print(f"\n{res.num_rounds} rounds in {time.time()-t0:.1f}s real, "
+          f"{res.total_time:.1f}s simulated wireless time, "
+          f"straggler rate {res.straggler_rate:.1%}, "
+          f"{exp.trace_count} jit trace "
           f"(BA policy would need {ROUNDS*ba_round:.1f}s)")
 
 

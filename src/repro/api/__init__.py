@@ -11,6 +11,10 @@ every launcher, example and benchmark used to re-wire by hand:
     res = exp.run_round(batches)                   # one Algorithm-1+2 global round
     res.metrics, res.timing.total                  # training + simulated wall-clock
 
+    camp = exp.run(num_rounds=20, stream=stream,   # multi-round campaign:
+                   cohort=8, deadline=5.0)         # fading + cohorts + stragglers
+    camp.history("loss_round_start"), camp.total_time
+
 Three pluggable strategy axes, each a named registry (mirroring
 ``config.register_arch`` — unknown names raise ``KeyError`` listing the
 known ones):
@@ -35,9 +39,11 @@ from repro.api.allocators import allocators, get_allocator
 from repro.api.compressors import Compressor, compressors, get_compressor
 from repro.api.experiment import Experiment, RoundResult
 from repro.api.registry import Registry
+from repro.sim.campaign import CampaignResult, RoundRecord
 
 __all__ = [
     "Experiment", "RoundResult", "Registry",
+    "CampaignResult", "RoundRecord",
     "aggregators", "get_aggregator",
     "allocators", "get_allocator",
     "compressors", "get_compressor", "Compressor",

@@ -8,9 +8,12 @@ round timing.  Strategy axes are pluggable by name through the registries
 in this package (``aggregators`` / ``allocators`` / ``compressors``).
 
     exp = Experiment.from_config(run_cfg, allocator="proposed")
-    for r in range(rounds):
-        res = exp.run_round(client_batches(stream, r, exp.cohort))
-        print(res.metrics["loss_round_start"], res.timing.total.max())
+    res = exp.run(num_rounds=20, stream=stream, cohort=8, deadline=5.0)
+    res.history("loss_round_start"), res.total_time
+
+Single rounds remain first-class (``run_round``); ``run`` drives the
+``repro.sim`` campaign engine — time-varying channels, elastic cohorts,
+deadline stragglers — over the same jitted round function.
 """
 
 from __future__ import annotations
@@ -80,6 +83,13 @@ class Experiment:
         allocate = allocators.get(allocator)
         self.compressor: Compressor = get_compressor(compressor,
                                                      **(compressor_kw or {}))
+        # campaign engine re-solves (reallocate=True) with the same strategy
+        self._allocate = allocate
+        self._eta_search = eta_search
+        self.seed = seed
+        # simulated campaign wall-clock accumulated so far; consecutive
+        # run() calls continue it (checkpoint restore overrides it)
+        self.campaign_time = 0.0
 
         # --- channel + allocation: the codec's uplink ratio rescales the
         # paper's s bits before the allocator prices the round.  A caller who
@@ -102,10 +112,21 @@ class Experiment:
         # --- model + split + jitted round function --------------------------
         key = jax.random.PRNGKey(seed) if key is None else key
         self.state, self._axes = fedsllm.init_state(cfg, self.cut, key=key)
-        self._round_fn = jax.jit(fedsllm.build_round_fn(
+        raw_round_fn = fedsllm.build_round_fn(
             cfg, self.fcfg, self.cut, self.eta, remat=remat, dp_clip=dp_clip,
             dp_noise=dp_noise, aggregator=aggregate,
-            compressor=(None if compressor == "none" else self.compressor)))
+            compressor=(None if compressor == "none" else self.compressor),
+            dp_seed=seed)
+
+        # trace-counting wrapper: the counter bumps only when jit (re)traces,
+        # so campaigns can assert they never recompile across rounds
+        self._traces = 0
+
+        def _counted_round_fn(state, batches, mask, key, weights):
+            self._traces += 1
+            return raw_round_fn(state, batches, mask, key, weights)
+
+        self._round_fn = jax.jit(_counted_round_fn)
 
     # ------------------------------------------------------------------
 
@@ -140,6 +161,14 @@ class Experiment:
         return self._round_fn
 
     @property
+    def trace_count(self) -> int:
+        """How many times the round function has been traced (≈ compiled).
+
+        A multi-round campaign must keep this at 1: per-round masks, weights
+        and batches vary only in value, never in structure."""
+        return self._traces
+
+    @property
     def wall_clock_per_round(self) -> float:
         """Simulated wireless wall-clock of one global round (slowest client,
         seconds), at the η the rounds actually train with."""
@@ -151,16 +180,50 @@ class Experiment:
         return jnp.asarray(self.net.D_k[:num_clients], jnp.float32)
 
     def run_round(self, batches, key: Optional[jax.Array] = None,
-                  mask: Optional[jax.Array] = None) -> RoundResult:
+                  mask: Optional[jax.Array] = None,
+                  client_ids: Optional[np.ndarray] = None) -> RoundResult:
         """One global round: train (Algorithms 1+2) + simulated wall-clock.
 
         ``batches``: pytree with leaves stacked ``(C, ...)``, one slice per
         cohort client.  ``mask``: optional ``(C,)`` survivor mask.
+        ``client_ids``: which simulated users this cohort is (aggregation
+        weights become their ``D_k``); default: the first ``C`` users.
+        ``key``: optional PRNG key for the DP noise; when None, a per-round
+        key is derived inside the trace from the experiment seed and the
+        global round counter (so noise never repeats across rounds).
         """
         C = jax.tree.leaves(batches)[0].shape[0]
+        if client_ids is None:
+            weights = self.client_weights(C)
+        else:
+            weights = jnp.asarray(self.net.D_k[np.asarray(client_ids)],
+                                  jnp.float32)
         self.state, metrics = self._round_fn(self.state, batches, mask, key,
-                                             self.client_weights(C))
+                                             weights)
         return RoundResult(self.state, metrics, self.timing)
+
+    def run(self, num_rounds: Optional[int] = None, **kwargs) -> "CampaignResult":
+        """Run a multi-round campaign (the ``repro.sim`` engine).
+
+        Per-round channel re-sampling (``resample_channel=True``, optionally
+        ``reallocate=True``), elastic cohorts (``cohort=``), deadline
+        straggler masks (``deadline=`` seconds), Lemma-1 stopping
+        (``stop_at_lemma1=True``) and periodic checkpointing
+        (``checkpoint_dir=``/``checkpoint_every=``/``resume=``).  Data comes
+        from exactly one of ``stream=``/``batches=``/``batches_fn=``; see
+        :func:`repro.sim.campaign.run_campaign` for the full contract.
+
+        ``num_rounds`` is the campaign's absolute length — rounds run from
+        the state's current global round counter, so consecutive ``run``
+        calls continue the same scenario rather than replaying it.  On a
+        fresh experiment, ``run(num_rounds=1, resample_channel=False,
+        batches=b)`` is bit-identical to ``run_round(b)``; the whole
+        campaign reuses one jit trace of the round function
+        (``trace_count`` stays at 1).
+        """
+        from repro.sim.campaign import run_campaign
+
+        return run_campaign(self, num_rounds, **kwargs)
 
     def describe(self) -> str:
         from repro.core.lora import lora_param_count

@@ -26,6 +26,19 @@ import jax
 import numpy as np
 
 
+def _json_safe(obj):
+    """Metadata often carries numpy scalars (simulated times, round indices);
+    coerce them so ``json.dump`` never rejects a checkpoint save."""
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"metadata value of type {type(obj).__name__} "
+                    f"is not JSON-serialisable")
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
@@ -50,7 +63,7 @@ class Checkpointer:
             meta = dict(metadata or {})
             meta.update({"step": step, "time": time.time(), "n_leaves": len(host_leaves)})
             with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump(meta, f)
+                json.dump(meta, f, default=_json_safe)
             # commit marker makes partially-written dirs detectable
             with open(os.path.join(tmp, "COMMITTED"), "w") as f:
                 f.write("ok")

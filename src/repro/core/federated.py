@@ -68,7 +68,12 @@ def coordinate_median(stacked, weights: Optional[jax.Array] = None,
         if mask is not None:
             mb = m.reshape((K,) + (1,) * (x.ndim - 1)) > 0
             xf = jnp.where(mb, xf, jnp.nan)
-            return jnp.nanmedian(xf, axis=0).astype(x.dtype)
+            med = jnp.nanmedian(xf, axis=0)
+            # zero survivors (e.g. a round where every client missed the
+            # deadline) must yield a zero update, not NaN-poison the state —
+            # matching fedavg/trimmed_mean's graceful degradation
+            med = jnp.where(jnp.sum(m) > 0, med, 0.0)
+            return med.astype(x.dtype)
         return jnp.median(xf, axis=0).astype(x.dtype)
 
     return jax.tree.map(one, stacked)

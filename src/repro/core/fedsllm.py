@@ -67,7 +67,7 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
                    xi: Optional[float] = None, delta: Optional[float] = None,
                    remat: bool = False, dp_clip: float = 0.0,
                    dp_noise: float = 0.0, aggregator: Optional[Callable] = None,
-                   compressor=None) -> Callable:
+                   compressor=None, dp_seed: int = 0) -> Callable:
     """Build the jittable global-round function (the `repro.api` engine).
 
     round_fn(state, batches, mask=None, key=None, weights=None)
@@ -84,6 +84,11 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
     dp_clip/dp_noise: per-client L2 clip + Gaussian noise multiplier on the
     uploaded updates (DP-FedAvg; the paper's noise-layer counterpart at the
     fed-server uplink). 0 disables.
+    dp_seed: base seed of the DP noise stream.  When the caller passes
+    ``key=None`` the per-round key is ``fold_in(PRNGKey(dp_seed),
+    state.round)`` — fresh noise every global round (a fixed fallback key
+    would silently reuse the same noise each round), derived inside the
+    trace so multi-round campaigns keep a single jit compilation.
     """
     xi = fcfg.xi if xi is None else xi
     delta = fcfg.delta if delta is None else delta
@@ -138,7 +143,9 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
         if dp_clip > 0.0:
             from repro.core import privacy
 
-            key = key if key is not None else jax.random.PRNGKey(0)
+            if key is None:
+                key = jax.random.fold_in(jax.random.PRNGKey(dp_seed),
+                                         state.round)
             h_c = privacy.clip_and_noise_updates(h_c, key, clip_norm=dp_clip,
                                                  noise_multiplier=dp_noise)
 

@@ -10,7 +10,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --arch fedsllm-100m \
       --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
   PYTHONPATH=src python -m repro.launch.train --arch fedsllm-100m --fedsllm \
-      --clients 8 --rounds 5 --eta 0.5
+      --clients 8 --rounds 5 --eta 0.5 --cohort 4 --deadline 120
 """
 
 from __future__ import annotations
@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.config import FedsLLMConfig, TrainConfig, get_arch, smoke_variant
-from repro.data.tokens import TokenStream, client_batches
+from repro.data.tokens import TokenStream
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
 
@@ -67,11 +67,16 @@ def train_standard(args):
 
 
 def train_fedsllm(args):
-    """Paper mode: LoRA + split + federated rounds with simulated wireless.
+    """Paper mode: a multi-round FedsLLM campaign with simulated wireless.
 
     One ``Experiment`` wires model init, the split cut, the jitted round
     function, the §IV channel model and the delay-minimisation allocator;
     the strategy axes are selected by name (--aggregator/--allocator/--codec).
+    ``Experiment.run`` (the ``repro.sim`` campaign engine) then drives the
+    rounds: per-round channel re-sampling (disable with --freeze-channel,
+    re-solve the allocator per round with --reallocate), elastic cohorts
+    (--cohort < --clients), deadline stragglers (--deadline) and periodic
+    checkpointing with auto-resume (--ckpt-dir/--ckpt-every).
     """
     from repro.api import Experiment
     from repro.config import RunConfig, ShapeConfig
@@ -91,15 +96,27 @@ def train_fedsllm(args):
 
     stream = TokenStream(args.batch, args.seq, cfg.vocab_size, seed=0)
     t0 = time.time()
-    simulated = 0.0
-    for r in range(args.rounds):
-        batches = client_batches(stream, r, args.clients)
-        res = exp.run_round(batches)
-        simulated += res.wall_clock
-        print(f"round {r:3d}  loss_start {float(res.metrics['loss_round_start']):.4f}"
-              f"  loss_local_end {float(res.metrics['loss_local_final']):.4f}"
-              f"  simulated {simulated:9.1f}s  ({time.time()-t0:.1f}s)", flush=True)
-    return exp.state
+
+    def log(rec):
+        print(f"round {rec.round:3d}  "
+              f"survivors {rec.survivors}/{rec.cohort_size}  "
+              f"loss_start {rec.metrics['loss_round_start']:.4f}  "
+              f"loss_local_end {rec.metrics['loss_local_final']:.4f}  "
+              f"simulated {rec.cumulative_time:9.1f}s  "
+              f"({time.time()-t0:.1f}s)", flush=True)
+
+    res = exp.run(num_rounds=args.rounds, stream=stream,
+                  cohort=args.cohort or None,
+                  resample_channel=not args.freeze_channel,
+                  reallocate=args.reallocate, deadline=args.deadline,
+                  stop_at_lemma1=args.stop_lemma1,
+                  checkpoint_dir=args.ckpt_dir,
+                  checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
+                  resume=bool(args.ckpt_dir), on_round=log)
+    print(f"{res.num_rounds} rounds ({res.stopped_by}; Lemma-1 budget "
+          f"{res.rounds_lemma1}), {res.total_time:.1f}s simulated, "
+          f"straggler rate {res.straggler_rate:.1%}, jit traces {exp.trace_count}")
+    return res.state
 
 
 def main():
@@ -116,8 +133,20 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     # fedsllm mode
     ap.add_argument("--fedsllm", action="store_true")
-    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=8,
+                    help="simulated radio population K")
     ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="clients trained per round (< clients = elastic "
+                         "subsampling; 0 = all)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-round straggler deadline, simulated seconds")
+    ap.add_argument("--freeze-channel", action="store_true",
+                    help="keep round 0's channel draw for every round")
+    ap.add_argument("--reallocate", action="store_true",
+                    help="re-solve the allocator on every round's channel draw")
+    ap.add_argument("--stop-lemma1", action="store_true",
+                    help="cap rounds at Lemma 1's a/(1-eta) budget")
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--lora-rank", type=int, default=8)
     ap.add_argument("--aggregator", default="weighted",

@@ -1,0 +1,14 @@
+"""Campaign simulation: multi-round scenarios over time-varying channels.
+
+``campaign`` drives an ``Experiment`` through many global rounds (the engine
+behind ``Experiment.run``); ``events`` generates the per-round scenario —
+block-fading channel draws, elastic cohorts, deadline straggler masks — all
+deterministically keyed by ``(campaign_seed, round)``.
+"""
+
+from repro.sim import events
+from repro.sim.campaign import (CampaignResult, RoundRecord, run_campaign,
+                                stream_batcher)
+
+__all__ = ["CampaignResult", "RoundRecord", "run_campaign", "stream_batcher",
+           "events"]

@@ -1,0 +1,277 @@
+"""Multi-round campaign engine.
+
+Drives an :class:`repro.api.Experiment` through repeated global rounds under
+*time-varying* wireless scenarios: per-round channel re-sampling (block
+fading), optional per-round allocator re-solves, elastic cohorts via
+``federated.client_sample`` and deadline-based straggler masks derived from
+each round's simulated :class:`~repro.core.fedsllm.RoundTiming`.  The mask is
+threaded into the round function's existing ``mask`` argument, so the whole
+campaign reuses ONE jit trace — shapes, dtypes and argument structure are
+identical every round (asserted by ``tests/test_campaign.py``).
+
+A campaign is a pure function of ``(RunConfig, seed)``: channel draws,
+cohorts and data are all keyed by the absolute round index, so two runs of
+the same config are bit-identical and a checkpoint-resumed campaign replays
+exactly the rounds an uninterrupted one would have run.
+
+    res = exp.run(num_rounds=20, stream=stream, cohort=8,
+                  deadline=5.0, resample_channel=True)
+    res.history("loss_round_start"), res.total_time, res.records[3].mask
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core import fedsllm
+from repro.core.fedsllm import FedsLLMState, RoundTiming
+from repro.core.resource_alloc import Allocation
+from repro.sim import events
+
+if TYPE_CHECKING:  # pragma: no cover — avoid a repro.api import cycle
+    from repro.api.experiment import Experiment
+
+
+@dataclass
+class RoundRecord:
+    """Everything one campaign round produced (host-side, reporting-ready)."""
+
+    round: int  # absolute global-round index n
+    client_ids: np.ndarray  # (C,) simulated users trained this round
+    mask: Optional[np.ndarray]  # (C,) deadline survivors; None = no deadline
+    metrics: dict[str, float]  # round metrics, device-synced to floats
+    alloc: Allocation  # the allocation this round was priced under
+    timing: RoundTiming  # (K,) per-user simulated delays this round
+    round_time: float  # simulated seconds this round cost the server
+    cumulative_time: float  # simulated campaign wall-clock through this round
+
+    @property
+    def cohort_size(self) -> int:
+        return len(self.client_ids)
+
+    @property
+    def survivors(self) -> int:
+        return self.cohort_size if self.mask is None else int(np.sum(self.mask > 0))
+
+    @property
+    def stragglers(self) -> int:
+        return self.cohort_size - self.survivors
+
+
+@dataclass
+class CampaignResult:
+    """A finished campaign: per-round history + final state + why it stopped."""
+
+    records: list[RoundRecord]
+    state: FedsLLMState
+    total_time: float  # simulated wireless seconds, whole campaign
+    rounds_lemma1: int  # Lemma 1 budget a/(1-η) at the training η
+    # "num_rounds" | "lemma1" | "checkpoint" (restore already covered the
+    # requested rounds — records is then empty)
+    stopped_by: str
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.records)
+
+    def history(self, metric: str) -> np.ndarray:
+        """One metric across rounds, e.g. ``history("loss_round_start")``."""
+        return np.asarray([r.metrics[metric] for r in self.records])
+
+    @property
+    def straggler_rate(self) -> float:
+        """Fraction of cohort slots lost to the deadline over the campaign."""
+        slots = sum(r.cohort_size for r in self.records)
+        return sum(r.stragglers for r in self.records) / max(slots, 1)
+
+
+def stream_batcher(stream, num_clients: int) -> Callable[[int, np.ndarray], Any]:
+    """Per-round batches for a cohort drawn from ``num_clients`` users.
+
+    Client ``k`` reads its own deterministic position ``r·K + k`` of the
+    stream — identical to ``data.tokens.client_batches`` when the cohort is
+    the full population, and stable under elastic sampling (a client's data
+    does not depend on who else was sampled).
+    """
+
+    def fn(round_idx: int, client_ids: np.ndarray):
+        per_client = [stream.batch_at(round_idx * num_clients + int(k))
+                      for k in client_ids]
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_client)
+
+    return fn
+
+
+def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
+                 stream=None, batches=None,
+                 batches_fn: Optional[Callable[[int, np.ndarray], Any]] = None,
+                 cohort: Optional[int] = None,
+                 resample_channel: bool = True, reallocate: bool = False,
+                 deadline: Optional[float] = None,
+                 stop_at_lemma1: bool = False,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, resume: bool = False,
+                 campaign_seed: Optional[int] = None,
+                 on_round: Optional[Callable[[RoundRecord], None]] = None,
+                 ) -> CampaignResult:
+    """Run a multi-round campaign on ``exp`` (see ``Experiment.run``).
+
+    Data source — exactly one of:
+      ``batches_fn(round_idx, client_ids) -> stacked pytree``  (full control)
+      ``stream``   a ``TokenStream``; each client reads its own positions
+      ``batches``  one fixed stacked pytree reused every round (cohort is
+                   then pinned to its leading axis — no elastic sampling)
+
+    Scenario axes:
+      ``resample_channel``  fresh §IV network draw per round (block fading),
+          keyed by ``(campaign_seed, round)``.  With ``reallocate=False`` the
+          stale allocation is re-priced under the new gains
+          (:func:`events.retime_allocation`); with ``reallocate=True`` the
+          experiment's allocator strategy re-solves every round.  Training η
+          (and therefore the jitted round function) never changes.
+      ``cohort``    clients trained per round (< K ⇒ elastic subsampling via
+          ``federated.client_sample``); default: the full population.
+      ``deadline``  simulated seconds; cohort members whose round delay
+          exceeds it are masked out of aggregation (``deadline_mask``).
+
+    Stopping & durability:
+      ``num_rounds`` is the campaign's ABSOLUTE length: rounds run from the
+          state's current global round counter up to ``num_rounds``, so
+          ``run(5)`` then ``run(10)`` trains rounds 0–4 then 5–9 (a second
+          ``run(5)`` is a no-op, not a replay of the same scenario).
+      ``stop_at_lemma1``  cap rounds at Lemma 1's ⌈a/(1−η)⌉ budget.
+      ``checkpoint_dir``/``checkpoint_every``  periodic + final state saves;
+          ``resume=True`` restores the newest checkpoint and replays the
+          remaining rounds bit-identically (everything is round-indexed).
+          Non-campaign or different-campaign checkpoints are refused.
+    """
+    fcfg = exp.fcfg
+    K = fcfg.num_clients
+    campaign_seed = exp.seed if campaign_seed is None else campaign_seed
+
+    # --- data source ------------------------------------------------------
+    provided = [x is not None for x in (batches_fn, stream, batches)]
+    if sum(provided) != 1:
+        raise ValueError("provide exactly one of batches_fn= / stream= / batches=")
+    fixed_cohort = None
+    if batches is not None:
+        fixed_cohort = jax.tree.leaves(batches)[0].shape[0]
+        batches_fn = lambda r, ids: batches  # noqa: E731
+    elif stream is not None:
+        batches_fn = stream_batcher(stream, K)
+
+    if cohort is None:
+        cohort = K if fixed_cohort is None else fixed_cohort
+    if fixed_cohort is not None and cohort != fixed_cohort:
+        raise ValueError(f"cohort={cohort} != leading axis {fixed_cohort} of batches=")
+    if not 1 <= cohort <= K:
+        raise ValueError(f"cohort={cohort} must be in [1, num_clients={K}]")
+    if reallocate and not resample_channel:
+        raise ValueError("reallocate=True requires resample_channel=True "
+                         "(re-solving the frozen channel draw is a no-op)")
+
+    # --- stopping rule ----------------------------------------------------
+    rounds_lemma1 = fedsllm.global_round_count(fcfg, exp.eta)
+    if num_rounds is None and not stop_at_lemma1:
+        raise ValueError("give num_rounds= and/or stop_at_lemma1=True")
+    if stop_at_lemma1 and (num_rounds is None or rounds_lemma1 <= num_rounds):
+        target, stopped_by = rounds_lemma1, "lemma1"
+    else:
+        target, stopped_by = num_rounds, "num_rounds"
+
+    # --- checkpoint / resume ---------------------------------------------
+    ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
+    # continue the simulated wall-clock across consecutive run() calls on
+    # the same Experiment (a checkpoint restore overrides it below)
+    cumulative = float(getattr(exp, "campaign_time", 0.0))
+    if resume and ckpt is not None:
+        got = ckpt.restore_or_none()
+        if got is not None:
+            state, meta = got
+            # a checkpoint from a different campaign (or not from a campaign
+            # at all) would silently splice incompatible runs — refuse
+            if "round" not in meta:
+                raise ValueError(
+                    f"checkpoint in {checkpoint_dir!r} is not a campaign "
+                    f"checkpoint (no 'round' metadata — e.g. a standard-"
+                    f"training save); refusing to resume from it")
+            for field, current in (("campaign_seed", campaign_seed),
+                                   ("eta", exp.eta),
+                                   ("allocator", exp.allocator_name)):
+                if field in meta and meta[field] != current:
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} is from a "
+                        f"different campaign: {field}={meta[field]!r} vs "
+                        f"this run's {current!r}")
+            exp.state = state
+            cumulative = float(meta.get("cumulative_time", 0.0))
+            if int(meta["round"]) >= target:
+                stopped_by = "checkpoint"  # restore already covers the ask
+
+    # rounds are ABSOLUTE indices: the campaign picks up at the state's
+    # global round counter, so a second run() (or a run() after manual
+    # run_round calls) continues the scenario instead of silently replaying
+    # round 0's channel draws, cohorts and batches against advanced state
+    start = min(int(np.asarray(jax.device_get(exp.state.round))), target)
+
+    base_alloc = exp.alloc  # the last *solved* allocation (retiming input)
+    records: list[RoundRecord] = []
+    for r in range(start, target):
+        # (a) per-round scenario: channel draw + allocation + timing
+        if resample_channel:
+            exp.net = events.round_network(fcfg, campaign_seed, r)
+            if reallocate:
+                base_alloc = exp._allocate(fcfg, exp.net,
+                                           eta_search=exp._eta_search)
+                exp.alloc = base_alloc
+            else:
+                exp.alloc = events.retime_allocation(fcfg, exp.net, base_alloc)
+            exp.timing = fedsllm.simulate_round_time(fcfg, exp.net, exp.alloc,
+                                                     exp.eta)
+
+        # (b) elastic cohort + (c) deadline stragglers
+        ids = (np.arange(cohort) if fixed_cohort is not None
+               else events.cohort_ids(r, K, cohort, seed=campaign_seed))
+        mask_np = events.straggler_mask(exp.timing.total, ids, deadline)
+        mask = None if mask_np is None else jnp.asarray(mask_np)
+        round_time = events.round_wall_clock(exp.timing.total, ids, deadline)
+
+        # (d) train the round through the ONE jitted round function
+        res = exp.run_round(batches_fn(r, ids), mask=mask, client_ids=ids)
+
+        cumulative += round_time
+        rec = RoundRecord(
+            round=r, client_ids=np.asarray(ids), mask=mask_np,
+            metrics={k: float(v) for k, v in res.metrics.items()},
+            alloc=exp.alloc, timing=exp.timing,
+            round_time=round_time, cumulative_time=cumulative)
+        records.append(rec)
+        if on_round is not None:
+            on_round(rec)
+
+        if ckpt is not None and checkpoint_every and (r + 1) % checkpoint_every == 0:
+            _save(ckpt, exp, r + 1, cumulative, campaign_seed)
+
+    if ckpt is not None and target > start:
+        saved_on_loop = checkpoint_every and target % checkpoint_every == 0
+        if not saved_on_loop:
+            _save(ckpt, exp, target, cumulative, campaign_seed)
+
+    exp.campaign_time = cumulative
+    return CampaignResult(records=records, state=exp.state,
+                          total_time=cumulative, rounds_lemma1=rounds_lemma1,
+                          stopped_by=stopped_by)
+
+
+def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
+          cumulative: float, campaign_seed: int) -> None:
+    ckpt.save(rounds_done, exp.state,
+              {"round": rounds_done, "cumulative_time": cumulative,
+               "campaign_seed": campaign_seed, "eta": exp.eta,
+               "allocator": exp.allocator_name})

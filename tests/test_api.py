@@ -53,9 +53,17 @@ def test_unknown_strategy_lists_known_names(registry):
         assert name in msg
 
 
-def test_unknown_strategy_in_experiment(run_cfg):
-    with pytest.raises(KeyError, match="unknown aggregator"):
-        Experiment.from_config(run_cfg, aggregator="nope")
+@pytest.mark.parametrize("axis,registry", [
+    ("aggregator", aggregators),
+    ("allocator", allocators),
+    ("compressor", compressors),
+])
+def test_unknown_strategy_in_experiment(run_cfg, axis, registry):
+    """Every strategy axis fails fast at construction, naming the knowns."""
+    with pytest.raises(KeyError, match=f"unknown {axis}") as exc:
+        Experiment.from_config(run_cfg, **{axis: "nope"})
+    for name in registry.names():
+        assert name in str(exc.value)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,366 @@
+"""Multi-round campaign engine: determinism, single-trace compilation,
+single-round equivalence, deadline stragglers, elastic cohorts, Lemma-1
+stopping, checkpoint/resume, per-round DP keys."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CampaignResult, Experiment, RoundRecord
+from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                          get_arch, smoke_variant)
+from repro.core import federated, fedsllm
+from repro.data.tokens import TokenStream, client_batches
+from repro.sim import events
+
+K = 6        # simulated radio population
+COHORT = 4   # clients trained per round (elastic)
+ROUNDS = 3
+
+
+@pytest.fixture(scope="module")
+def run_cfg():
+    cfg = smoke_variant(get_arch("fedsllm-100m")).replace(
+        lora=LoRAConfig(rank=4, alpha=8.0))
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     fedsllm=FedsLLMConfig(num_clients=K))
+
+
+@pytest.fixture(scope="module")
+def stream(run_cfg):
+    return TokenStream(2, 32, run_cfg.model.vocab_size, seed=0)
+
+
+def _fresh(run_cfg, **kw):
+    kw.setdefault("allocator", "EB")
+    kw.setdefault("eta", 0.5)
+    return Experiment.from_config(run_cfg, **kw)
+
+
+def _campaign(run_cfg, stream, **kw):
+    exp = _fresh(run_cfg)
+    deadline = float(np.quantile(exp.timing.total, 0.7))
+    kw.setdefault("deadline", deadline)
+    kw.setdefault("cohort", COHORT)
+    kw.setdefault("resample_channel", True)
+    res = exp.run(num_rounds=ROUNDS, stream=stream, **kw)
+    return exp, res, kw["deadline"]
+
+
+@pytest.fixture(scope="module")
+def campaign_pair(run_cfg, stream):
+    """The same campaign run twice from identical configs."""
+    return _campaign(run_cfg, stream), _campaign(run_cfg, stream)
+
+
+# ---------------------------------------------------------------------------
+# Shape of a campaign + the no-recompile guarantee
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_result_structure(campaign_pair):
+    exp, res, _ = campaign_pair[0]
+    assert isinstance(res, CampaignResult) and res.num_rounds == ROUNDS
+    for r, rec in enumerate(res.records):
+        assert isinstance(rec, RoundRecord) and rec.round == r
+        assert rec.cohort_size == COHORT
+        assert np.isfinite(rec.metrics["loss_round_start"])
+        assert rec.timing.total.shape == (K,)
+        assert rec.round_time > 0
+    cum = res.history("loss_round_start")
+    assert cum.shape == (ROUNDS,)
+    # cumulative simulated wall-clock is strictly increasing
+    times = np.asarray([rec.cumulative_time for rec in res.records])
+    assert np.all(np.diff(times) > 0) and res.total_time == times[-1]
+
+
+def test_single_jit_trace_across_rounds(campaign_pair):
+    """The acceptance bar: masks/weights/batches vary per round in value
+    only — the round function must compile exactly once."""
+    for exp, _, _ in campaign_pair:
+        assert exp.trace_count == 1
+
+
+def test_channel_actually_varies_across_rounds(campaign_pair):
+    _, res, _ = campaign_pair[0]
+    t0, t1 = res.records[0].timing.total, res.records[1].timing.total
+    assert not np.allclose(t0, t1)
+    a0, a1 = res.records[0].alloc, res.records[1].alloc
+    assert not np.allclose(a0.t_c, a1.t_c)
+
+
+# ---------------------------------------------------------------------------
+# Determinism + single-round equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_determinism_bit_identical(campaign_pair):
+    """Same RunConfig + seed ⇒ bit-identical CampaignResult histories."""
+    (_, res_a, _), (_, res_b, _) = campaign_pair
+    assert res_a.total_time == res_b.total_time
+    for ra, rb in zip(res_a.records, res_b.records):
+        assert ra.metrics == rb.metrics  # exact float equality
+        np.testing.assert_array_equal(ra.client_ids, rb.client_ids)
+        np.testing.assert_array_equal(ra.mask, rb.mask)
+        assert ra.round_time == rb.round_time
+    for a, b in zip(jax.tree.leaves((res_a.state.lora_c, res_a.state.lora_s)),
+                    jax.tree.leaves((res_b.state.lora_c, res_b.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_single_round_matches_run_round(run_cfg, stream):
+    """run(num_rounds=1, resample_channel=False) ≡ run_round, bit-exact."""
+    batches = client_batches(stream, 0, K)
+    exp_single = _fresh(run_cfg)
+    ref = exp_single.run_round(batches)
+
+    exp_campaign = _fresh(run_cfg)
+    res = exp_campaign.run(num_rounds=1, resample_channel=False,
+                           batches=batches)
+    assert res.num_rounds == 1 and res.records[0].mask is None
+    for a, b in zip(jax.tree.leaves((ref.state.lora_c, ref.state.lora_s)),
+                    jax.tree.leaves((res.state.lora_c, res.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k, v in ref.metrics.items():
+        assert float(v) == res.records[0].metrics[k]
+    # and the frozen-channel path keeps the constructor's timing/allocation
+    np.testing.assert_array_equal(res.records[0].timing.total,
+                                  exp_campaign.timing.total)
+
+
+# ---------------------------------------------------------------------------
+# Deadline stragglers + elastic cohorts
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_mask_wired_from_round_timing(campaign_pair):
+    """Straggler masks must come from deadline_mask over THAT round's
+    simulated timing — dropping exactly the over-deadline clients."""
+    _, res, deadline = campaign_pair[0]
+    for rec in res.records:
+        assert rec.mask is not None and rec.mask.shape == (COHORT,)
+        expect = federated.deadline_mask(rec.timing.total[rec.client_ids],
+                                         deadline)
+        np.testing.assert_array_equal(rec.mask, expect)
+        assert rec.survivors + rec.stragglers == COHORT
+    # the chosen 0.7-quantile deadline must actually produce stragglers
+    assert res.straggler_rate > 0
+
+
+def test_elastic_cohort_membership_varies(campaign_pair):
+    _, res, _ = campaign_pair[0]
+    for rec in res.records:
+        ids = rec.client_ids
+        assert len(np.unique(ids)) == COHORT and ids.min() >= 0 and ids.max() < K
+    assert any(not np.array_equal(res.records[0].client_ids, r.client_ids)
+               for r in res.records[1:])
+
+
+def test_no_deadline_means_no_mask_and_slowest_paces(run_cfg, stream):
+    exp = _fresh(run_cfg)
+    res = exp.run(num_rounds=1, stream=stream, cohort=COHORT, deadline=None,
+                  resample_channel=True)
+    rec = res.records[0]
+    assert rec.mask is None and rec.survivors == COHORT
+    assert rec.round_time == pytest.approx(
+        float(np.max(rec.timing.total[rec.client_ids])))
+
+
+def test_deadline_caps_round_wall_clock():
+    total = np.array([1.0, 7.0, 3.0, 9.0])
+    ids = np.arange(4)
+    assert events.round_wall_clock(total, ids, None) == 9.0
+    assert events.round_wall_clock(total, ids, 5.0) == 5.0  # cut at deadline
+    assert events.round_wall_clock(total, ids, 50.0) == 9.0  # all made it
+    np.testing.assert_array_equal(events.straggler_mask(total, ids, 5.0),
+                                  [1.0, 0.0, 1.0, 0.0])
+    assert events.straggler_mask(total, ids, None) is None
+
+
+# ---------------------------------------------------------------------------
+# Scenario events
+# ---------------------------------------------------------------------------
+
+
+def test_round_network_keyed_by_round():
+    fcfg = FedsLLMConfig(num_clients=5)
+    a = events.round_network(fcfg, campaign_seed=0, round_idx=3)
+    b = events.round_network(fcfg, campaign_seed=0, round_idx=3)
+    c = events.round_network(fcfg, campaign_seed=0, round_idx=4)
+    np.testing.assert_array_equal(a.g_c, b.g_c)
+    assert not np.array_equal(a.g_c, c.g_c)
+
+
+def test_retime_allocation_prices_new_gains(run_cfg):
+    exp = _fresh(run_cfg)
+    fcfg = exp.fcfg
+    net2 = events.round_network(fcfg, campaign_seed=1, round_idx=0)
+    re = events.retime_allocation(fcfg, net2, exp.alloc)
+    # bandwidths/split untouched; uplink times re-priced
+    np.testing.assert_array_equal(re.b_c, exp.alloc.b_c)
+    assert re.A == exp.alloc.A
+    assert not np.allclose(re.t_c, exp.alloc.t_c)
+    # an outage (zero rate) becomes +inf — a guaranteed straggler, not a NaN
+    dead = events._transmit_time(1e3, np.array([0.0, 1e3]))
+    assert np.isinf(dead[0]) and dead[1] == 1.0
+
+
+def test_reallocate_resolves_every_round(run_cfg, stream):
+    exp = _fresh(run_cfg)
+    res = exp.run(num_rounds=2, stream=stream, cohort=COHORT,
+                  resample_channel=True, reallocate=True)
+    a0, a1 = res.records[0].alloc, res.records[1].alloc
+    assert a0.strategy == a1.strategy == "EB"
+    assert a0.T != a1.T  # each round solved on its own channel draw
+
+
+# ---------------------------------------------------------------------------
+# Stopping + checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_lemma1_stopping(run_cfg, stream):
+    """Lemma 1 budget ⌈a/(1−η)⌉ caps the campaign."""
+    # epsilon0 close to 1 ⇒ tiny a ⇒ small round budget
+    fcfg = FedsLLMConfig(num_clients=K, epsilon0=0.9)
+    cfg = RunConfig(model=run_cfg.model, shape=run_cfg.shape, fedsllm=fcfg)
+    exp = _fresh(cfg)
+    budget = fedsllm.global_round_count(exp.fcfg, exp.eta)
+    assert budget <= 10  # else this test would be slow
+    res = exp.run(num_rounds=50, stream=stream, cohort=COHORT,
+                  stop_at_lemma1=True)
+    assert res.num_rounds == budget == res.rounds_lemma1
+    assert res.stopped_by == "lemma1"
+
+
+def test_checkpoint_resume_is_bit_identical(run_cfg, stream, tmp_path):
+    """Interrupt after 2 of 4 rounds, resume in a NEW process-equivalent
+    Experiment: the final state matches the uninterrupted campaign exactly."""
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    exp_full = _fresh(run_cfg)
+    full = exp_full.run(num_rounds=4, **kw)
+
+    ckpt_dir = str(tmp_path / "camp")
+    exp_a = _fresh(run_cfg)
+    part = exp_a.run(num_rounds=2, checkpoint_dir=ckpt_dir,
+                     checkpoint_every=2, **kw)
+    assert part.num_rounds == 2
+
+    exp_b = _fresh(run_cfg)  # fresh state — must be overwritten by restore
+    rest = exp_b.run(num_rounds=4, checkpoint_dir=ckpt_dir, resume=True, **kw)
+    assert [r.round for r in rest.records] == [2, 3]
+    assert rest.total_time == pytest.approx(full.total_time)
+    for a, b in zip(jax.tree.leaves((full.state.lora_c, full.state.lora_s)),
+                    jax.tree.leaves((rest.state.lora_c, rest.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for ra, rb in zip(full.records[2:], rest.records):
+        assert ra.metrics == rb.metrics
+
+    # a checkpoint that already covers the ask runs nothing, and says so
+    noop = _fresh(run_cfg).run(num_rounds=2, checkpoint_dir=ckpt_dir,
+                               resume=True, **kw)
+    assert noop.num_rounds == 0 and noop.stopped_by == "checkpoint"
+
+    # resuming under a different campaign must refuse, not splice runs
+    other = _fresh(run_cfg)
+    with pytest.raises(ValueError, match="different campaign"):
+        other.run(num_rounds=6, checkpoint_dir=ckpt_dir, resume=True,
+                  campaign_seed=123, **kw)
+    with pytest.raises(ValueError, match="different campaign"):
+        _fresh(run_cfg, eta=0.4).run(num_rounds=6, checkpoint_dir=ckpt_dir,
+                                     resume=True, **kw)
+
+
+def test_resume_refuses_non_campaign_checkpoint(run_cfg, stream, tmp_path):
+    """A standard-training checkpoint (no 'round' metadata) must be refused,
+    not restored into the campaign state."""
+    from repro.checkpoint import Checkpointer
+
+    ck_dir = str(tmp_path / "std")
+    Checkpointer(ck_dir).save(5, {"params": jnp.ones(3)})  # no campaign meta
+    exp = _fresh(run_cfg)
+    with pytest.raises(ValueError, match="not a campaign checkpoint"):
+        exp.run(num_rounds=2, stream=stream, checkpoint_dir=ck_dir,
+                resume=True)
+
+
+def test_in_session_continuation_matches_single_run(run_cfg, stream):
+    """Rounds are absolute: run(2) then run(4) continues the scenario at
+    round 2 (no replay of round 0's draws) and lands bit-identical to one
+    uninterrupted run(4)."""
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    one = _fresh(run_cfg).run(num_rounds=4, **kw)
+
+    exp = _fresh(run_cfg)
+    exp.run(num_rounds=2, **kw)
+    second = exp.run(num_rounds=4, **kw)
+    assert [r.round for r in second.records] == [2, 3]
+    for a, b in zip(jax.tree.leaves((one.state.lora_c, one.state.lora_s)),
+                    jax.tree.leaves((second.state.lora_c, second.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # simulated wall-clock carries across the continuation too
+    assert second.total_time == pytest.approx(one.total_time)
+    # re-requesting an already-covered length is a no-op, not a replay
+    assert exp.run(num_rounds=4, **kw).num_rounds == 0
+
+
+def test_round0_resample_differs_from_constructor_draw(run_cfg):
+    """The round-0 block-fading redraw must not be the constructor's own
+    network realisation (seed-0 stream collision)."""
+    exp = _fresh(run_cfg)
+    assert exp.seed == 0
+    net0 = events.round_network(exp.fcfg, campaign_seed=0, round_idx=0)
+    assert not np.array_equal(net0.g_c, exp.net.g_c)
+
+
+# ---------------------------------------------------------------------------
+# Per-round DP keys (the PRNGKey(0)-reuse fix)
+# ---------------------------------------------------------------------------
+
+
+def test_dp_noise_is_fresh_each_round(run_cfg, stream):
+    """With key=None the DP noise must differ between global rounds (it used
+    to silently reuse PRNGKey(0) every round)."""
+    cfg = run_cfg.model
+    fcfg = run_cfg.fedsllm
+    batches = client_batches(stream, 0, K)
+    state0, _ = fedsllm.init_state(cfg, 1, key=jax.random.PRNGKey(0))
+    rf = jax.jit(fedsllm.build_round_fn(cfg, fcfg, 1, 0.5,
+                                        dp_clip=1.0, dp_noise=1.0))
+    s_r0, _ = rf(state0, batches, None, None, None)
+    s_r1, _ = rf(state0._replace(round=jnp.ones((), jnp.int32)),
+                 batches, None, None, None)
+    # identical inputs, different round counter ⇒ different noise draw
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(s_r0.lora_c), jax.tree.leaves(s_r1.lora_c))]
+    assert max(diffs) > 0
+    # explicit keys stay reproducible
+    k = jax.random.PRNGKey(7)
+    s_a, _ = rf(state0, batches, None, k, None)
+    s_b, _ = rf(state0, batches, None, k, None)
+    for a, b in zip(jax.tree.leaves(s_a.lora_c), jax.tree.leaves(s_b.lora_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Argument validation
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_argument_validation(run_cfg, stream):
+    exp = _fresh(run_cfg)
+    with pytest.raises(ValueError, match="exactly one"):
+        exp.run(num_rounds=1)
+    with pytest.raises(ValueError, match="exactly one"):
+        exp.run(num_rounds=1, stream=stream,
+                batches=client_batches(stream, 0, K))
+    with pytest.raises(ValueError, match="cohort"):
+        exp.run(num_rounds=1, stream=stream, cohort=K + 1)
+    with pytest.raises(ValueError, match="num_rounds"):
+        exp.run(stream=stream)
+    with pytest.raises(ValueError, match="leading axis"):
+        exp.run(num_rounds=1, batches=client_batches(stream, 0, K), cohort=2)
+    with pytest.raises(ValueError, match="resample_channel"):
+        exp.run(num_rounds=1, stream=stream, resample_channel=False,
+                reallocate=True)

@@ -28,6 +28,18 @@ def test_retention_policy(tmp_path):
     assert ck.steps() == [3, 4]
 
 
+def test_numpy_metadata_roundtrips(tmp_path):
+    """Campaign metadata carries numpy scalars (simulated times, rounds);
+    saving must coerce them to JSON instead of raising TypeError."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, tree(), {"cumulative_time": np.float32(12.5),
+                        "round": np.int64(3),
+                        "mask": np.array([1.0, 0.0])})
+    _, meta = ck.restore()
+    assert meta["cumulative_time"] == 12.5
+    assert meta["round"] == 3 and meta["mask"] == [1.0, 0.0]
+
+
 def test_corruption_quarantine_falls_back(tmp_path):
     ck = Checkpointer(str(tmp_path), keep=5)
     ck.save(1, tree(1.0))

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import federated
@@ -71,6 +72,58 @@ def test_apply_update_and_broadcast_roundtrip():
     h = jax.tree.map(lambda x: x * 0.5, b)
     new = federated.apply_update(g, federated.fedavg(h))
     np.testing.assert_allclose(np.asarray(new["w"]), 1.5)
+
+
+@given(K=st.integers(3, 8), seed=st.integers(0, 1000), drop=st.integers(0, 7))
+def test_mask_invariance_to_straggler_batch_content(K, seed, drop):
+    """A masked-out client's update contents must not change the aggregate:
+    whatever a straggler computed (or garbage it uploaded) is irrelevant once
+    the deadline mask zeroes it — for every registered aggregator.
+
+    (Aggregators iterated inside the body: the offline hypothesis fallback
+    hides the signature, which defeats @pytest.mark.parametrize.)"""
+    from repro.api import aggregators
+
+    drop = drop % K
+    rng = np.random.default_rng(seed)
+    clean = rng.normal(size=(K, 5)).astype(np.float32)
+    poisoned = clean.copy()
+    poisoned[drop] = rng.normal(scale=1e6, size=5).astype(np.float32)
+    mask = np.ones(K, np.float32)
+    mask[drop] = 0.0
+    weights = jnp.asarray(rng.uniform(0.5, 2.0, K).astype(np.float32))
+    for name in aggregators.names():
+        agg = aggregators.get(name)
+        a = agg(_stack(clean), weights=weights, mask=jnp.asarray(mask))
+        b = agg(_stack(poisoned), weights=weights, mask=jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]),
+                                      err_msg=f"aggregator {name!r}")
+
+
+@given(K=st.integers(3, 8), seed=st.integers(0, 1000))
+def test_deadline_mask_drops_exactly_over_deadline(K, seed):
+    """deadline_mask over simulated round delays keeps exactly the clients
+    meeting the deadline (the campaign engine's straggler wiring)."""
+    rng = np.random.default_rng(seed)
+    T_k = rng.uniform(0.1, 10.0, K)
+    deadline = float(np.median(T_k))
+    m = federated.deadline_mask(T_k, deadline)
+    np.testing.assert_array_equal(m, (T_k <= deadline).astype(np.float32))
+    assert m.sum() >= 1  # the median itself always survives
+
+
+def test_all_straggler_round_yields_zero_update():
+    """A round where EVERY client misses the deadline must contribute a zero
+    update under every aggregator — never NaN (which would poison the state
+    for the rest of the campaign)."""
+    from repro.api import aggregators
+
+    tree = _stack(np.random.default_rng(0).normal(size=(4, 3)).astype(np.float32))
+    mask = jnp.zeros(4)
+    for name in aggregators.names():
+        out = aggregators.get(name)(tree, mask=mask)
+        np.testing.assert_array_equal(np.asarray(out["w"]), 0.0,
+                                      err_msg=f"aggregator {name!r}")
 
 
 def test_deadline_mask():
