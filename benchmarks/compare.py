@@ -1,0 +1,110 @@
+"""Perf-trajectory gate: diff BENCH_round.json against a committed baseline.
+
+``benchmarks/run.py`` mirrors every bench run to ``results/BENCH_round.json``
+(name → {us_per_call, derived}).  This tool compares that file against the
+committed ``benchmarks/BENCH_baseline.json`` and exits non-zero when any
+shared entry's wall-clock regressed more than ``--threshold`` (default 10%,
+ROADMAP open item #2) — CI runs it right after the campaign smoke, so a PR
+that slows a hot path fails loudly instead of drifting.
+
+New entries (benches the baseline predates) and removed entries are
+reported but never fail the gate; refresh the baseline deliberately with
+``--update`` after an intentional perf change.  Caveat: the committed
+baseline encodes the wall-clock of the machine that blessed it — if the CI
+runner class changes (or proves noisier than 10%), re-bless the baseline
+from a CI run's uploaded BENCH_round artifact (or raise ``--threshold``)
+rather than chasing phantom regressions.
+
+    PYTHONPATH=src python benchmarks/run.py campaign
+    PYTHONPATH=src python benchmarks/compare.py            # gate
+    PYTHONPATH=src python benchmarks/compare.py --update   # bless current
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_CURRENT = os.path.join(HERE, os.pardir, "results", "BENCH_round.json")
+DEFAULT_BASELINE = os.path.join(HERE, "BENCH_baseline.json")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(current: dict, baseline: dict, threshold: float,
+            min_us: float) -> tuple[list[str], list[str]]:
+    """Returns (report lines, regression names)."""
+    lines, regressions = [], []
+    for name in sorted(set(current) | set(baseline)):
+        cur = current.get(name)
+        base = baseline.get(name)
+        if cur is None:
+            lines.append(f"  - {name}: only in baseline (not run)")
+            continue
+        if base is None:
+            lines.append(f"  + {name}: new ({cur['us_per_call']:.1f} us) — "
+                         f"baseline it with --update")
+            continue
+        b, c = float(base["us_per_call"]), float(cur["us_per_call"])
+        delta = (c - b) / b if b > 0 else 0.0
+        tag = "ok"
+        if c > b * (1.0 + threshold) and c - b > min_us:
+            tag = "REGRESSION"
+            regressions.append(name)
+        elif c < b * (1.0 - threshold):
+            tag = "improved"
+        lines.append(f"  {name}: {b:.1f} -> {c:.1f} us ({delta:+.1%}) {tag}")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="this run's BENCH_round.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline to diff against")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative wall-clock regression that fails the gate")
+    ap.add_argument("--min-us", type=float, default=1000.0,
+                    help="ignore regressions smaller than this many µs "
+                         "(sub-ms benches are timer noise)")
+    ap.add_argument("--update", action="store_true",
+                    help="bless the current results as the new baseline")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"no current results at {args.current} — run benchmarks/run.py "
+              f"first", file=sys.stderr)
+        return 2
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {os.path.relpath(args.baseline)}")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"no committed baseline at {args.baseline} — create one with "
+              f"--update", file=sys.stderr)
+        return 2
+
+    lines, regressions = compare(load(args.current), load(args.baseline),
+                                 args.threshold, args.min_us)
+    print(f"bench diff vs {os.path.relpath(args.baseline)} "
+          f"(threshold {args.threshold:.0%}):")
+    print("\n".join(lines))
+    if regressions:
+        print(f"FAIL: {len(regressions)} wall-clock regression(s) "
+              f">{args.threshold:.0%}: {', '.join(regressions)}",
+              file=sys.stderr)
+        return 1
+    print("OK: no wall-clock regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -152,6 +152,23 @@ def bench_campaign():
          f"traces={exp.trace_count}_stragglers={res.straggler_rate:.2f}_"
          f"sim={res.total_time:.1f}s")
 
+    # joint-η reallocation: every round re-solves (16)/(17) on its own
+    # channel draw and adopts the solved η (quantized to the η-bucket grid),
+    # so the jit cache must stay bounded by the bucket count — the
+    # acceptance bar for re-solving Lemma 1/2 jointly without recompiling
+    exp2 = Experiment.from_config(run_cfg, eta=0.2, cut=1, allocator="EB",
+                                  scenario="geo-blockfade")
+    exp2.run(num_rounds=1, stream=stream, cohort=4, reallocate=True)  # compile
+    t0 = time.perf_counter()
+    res2 = exp2.run(num_rounds=4, stream=stream, cohort=4, reallocate=True)
+    jax.block_until_ready(res2.state.lora_c)
+    us2 = (time.perf_counter() - t0) / res2.num_rounds * 1e6
+    buckets = len(exp2.eta_buckets)
+    assert exp2.trace_count <= buckets, (exp2.trace_count, buckets)
+    emit("campaign_realloc_joint_eta", us2,
+         f"traces={exp2.trace_count}_eta_buckets={buckets}_"
+         f"scenario=geo-blockfade_sim={res2.total_time:.1f}s")
+
 
 def bench_kernels():
     from benchmarks.kernel_bench import bench_attention, bench_lora, bench_ssd

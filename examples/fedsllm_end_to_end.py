@@ -4,23 +4,27 @@
   2. run the delay-minimisation allocator (problem (17) + η sweep) to get
      (T*, η*, b*, t*) — and the EB/FE/BA baselines for comparison, each a
      named strategy in the ``repro.api.allocators`` registry,
-  3. run a *multi-round campaign* (``Experiment.run``): per-round block-fading
-     channel re-draws, an elastic 8-of-50 cohort, and a round deadline that
-     turns slow realisations into masked-out stragglers — the fed server
-     aggregates survivors only (Algorithm 1's masked reduction),
+  3. run a *multi-round campaign* (``Experiment.run``): per-round channel
+     evolution under a named scenario (``--scenario geo-blockfade`` keeps the
+     user geometry fixed and redraws only the fading; ``drift``/``hetero``/
+     ``outage`` add mobility, device tiers, fade bursts), an elastic 8-of-50
+     cohort, and a round deadline that turns slow realisations into
+     masked-out stragglers — the fed server aggregates survivors only
+     (Algorithm 1's masked reduction),
   4. report: convergence + simulated total training delay under each policy.
 
     PYTHONPATH=src python examples/fedsllm_end_to_end.py
+    PYTHONPATH=src python examples/fedsllm_end_to_end.py --scenario drift
 """
 
+import argparse
 import time
 
 import numpy as np
 
-from repro.api import Experiment, allocators
+from repro.api import Experiment, allocators, get_scenario, scenarios
 from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
                           get_arch, smoke_variant)
-from repro.core import delay_model as dm
 from repro.core import fedsllm
 from repro.data.tokens import TokenStream
 
@@ -29,12 +33,19 @@ ROUNDS = 8
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="blockfade",
+                    help=f"channel dynamics, one of {scenarios.names()}")
+    args = ap.parse_args()
+    # unknown names fail fast with the knowns listed, like every registry
+    scenario = get_scenario(args.scenario)
+
     # --- model: LoRA-adapted small LM, split at A_min of the depth ---------
     cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
     fcfg = FedsLLMConfig(num_clients=50)
 
     # --- paper §IV wireless simulation + problem (17), every strategy ------
-    net = dm.sample_network(fcfg, seed=0)
+    net = scenario.initial_network(fcfg, seed=0)
     alloc = {}
     for strat in allocators.names():  # BA / EB / FE / proposed
         alloc[strat] = allocators.get(strat)(fcfg, net, eta_search="coarse")
@@ -44,10 +55,11 @@ def main():
 
     # --- multi-round campaign under η*, one Experiment (reusing the network
     # realisation + allocation solved above — no second η sweep).  Rounds
-    # re-draw the channel (block fading); the stale allocation is re-priced
+    # evolve the channel per the scenario; the stale allocation is re-priced
     # under each draw, and clients missing the deadline are masked out. -----
     run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"], fedsllm=fcfg)
-    exp = Experiment.from_config(run_cfg, allocator="proposed", net=net, alloc=best)
+    exp = Experiment.from_config(run_cfg, allocator="proposed", net=net,
+                                 alloc=best, scenario=scenario)
     print(exp.describe())
     deadline = float(np.quantile(exp.timing.total, 0.8))  # cuts slowest ~20%
 

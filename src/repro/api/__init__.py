@@ -15,7 +15,7 @@ every launcher, example and benchmark used to re-wire by hand:
                    cohort=8, deadline=5.0)         # fading + cohorts + stragglers
     camp.history("loss_round_start"), camp.total_time
 
-Three pluggable strategy axes, each a named registry (mirroring
+Four pluggable strategy axes, each a named registry (mirroring
 ``config.register_arch`` — unknown names raise ``KeyError`` listing the
 known ones):
 
@@ -28,23 +28,31 @@ known ones):
                    delay model's ``s`` bits and its quantisation error flows
                    through training (straight-through; ``int8``/``randk``
                    are the stable in-loop choices, see the module docstring)
+  ``scenarios``    channel dynamics across campaign rounds: ``frozen`` |
+                   ``blockfade`` (default, the legacy bit-frozen semantics) |
+                   ``geo-blockfade`` | ``drift`` | ``hetero`` | ``outage`` —
+                   each splits the once-per-campaign large-scale state from
+                   per-round fading (``repro.sim.scenario``)
 
-``core.fedsllm.make_round_fn`` remains as a deprecated shim over the same
-engine (``build_round_fn``) and produces bit-identical rounds; new code
-should construct an :class:`Experiment` instead.
+``Experiment.sweep`` fans a grid of scenarios × allocators into one tidy
+records table (``repro.sim.sweep``) for cross-scenario comparisons.
 """
 
 from repro.api.aggregators import aggregators, get_aggregator
 from repro.api.allocators import allocators, get_allocator
 from repro.api.compressors import Compressor, compressors, get_compressor
 from repro.api.experiment import Experiment, RoundResult
-from repro.api.registry import Registry
+from repro.registry import Registry
 from repro.sim.campaign import CampaignResult, RoundRecord
+from repro.sim.scenario import Scenario, get_scenario, scenarios
+from repro.sim.sweep import SweepResult, run_sweep
 
 __all__ = [
     "Experiment", "RoundResult", "Registry",
     "CampaignResult", "RoundRecord",
+    "SweepResult", "run_sweep",
     "aggregators", "get_aggregator",
     "allocators", "get_allocator",
     "compressors", "get_compressor", "Compressor",
+    "scenarios", "get_scenario", "Scenario",
 ]

@@ -18,7 +18,7 @@ Registered strategies:
 
 from __future__ import annotations
 
-from repro.api.registry import Registry
+from repro.registry import Registry
 from repro.core import federated
 
 aggregators: Registry = Registry("aggregator")

@@ -16,7 +16,7 @@ Registered strategies (paper Fig. 2 legend):
 
 from __future__ import annotations
 
-from repro.api.registry import Registry
+from repro.registry import Registry
 from repro.core import resource_alloc as ra
 
 allocators: Registry = Registry("allocator")

@@ -34,7 +34,7 @@ from typing import Protocol, runtime_checkable
 
 import jax
 
-from repro.api.registry import Registry
+from repro.registry import Registry
 from repro.core import compression
 
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,7 @@ from repro.config import (FedsLLMConfig, LoRAConfig, ModelConfig, RunConfig)
 from repro.core import delay_model as dm
 from repro.core import fedsllm
 from repro.core.fedsllm import FedsLLMState, RoundTiming
-from repro.core.resource_alloc import Allocation
+from repro.core.resource_alloc import Allocation, quantize_eta
 
 
 @dataclass
@@ -64,11 +64,14 @@ class Experiment:
                  cut: Optional[int] = None, eta: Optional[float] = None,
                  aggregator: str = "weighted", allocator: str = "proposed",
                  compressor: str = "none", compressor_kw: Optional[dict] = None,
+                 scenario: Union[str, "Scenario"] = "blockfade",
                  seed: int = 0, remat: bool = False, dp_clip: float = 0.0,
                  dp_noise: float = 0.0, eta_search: str = "coarse",
                  lora_rank: int = 8, key: Optional[jax.Array] = None,
                  net: Optional[dm.Network] = None,
                  alloc: Optional[Allocation] = None):
+        from repro.sim.scenario import get_scenario
+
         if cfg.lora is None:
             cfg = cfg.replace(lora=LoRAConfig(rank=lora_rank))
         self.cfg = cfg
@@ -83,6 +86,9 @@ class Experiment:
         allocate = allocators.get(allocator)
         self.compressor: Compressor = get_compressor(compressor,
                                                      **(compressor_kw or {}))
+        # the scenario decides how the wireless network evolves across
+        # campaign rounds (channel dynamics axis; name or Scenario instance)
+        self.scenario = get_scenario(scenario)
         # campaign engine re-solves (reallocate=True) with the same strategy
         self._allocate = allocate
         self._eta_search = eta_search
@@ -97,36 +103,45 @@ class Experiment:
         # ``net``/``alloc`` to skip the re-solve. ----------------------------
         self.fcfg = dataclasses.replace(
             fcfg, s_bits=fcfg.s_bits * self.compressor.ratio)
-        self.net = dm.sample_network(self.fcfg, seed=seed) if net is None else net
+        self.net = (self.scenario.initial_network(self.fcfg, seed)
+                    if net is None else net)
+        # 'warm' needs an anchor η that doesn't exist yet at construction:
+        # the initial solve runs the coarse sweep to *produce* the anchor,
+        # and per-round re-solves (reallocate=True) then warm-start off it
+        ctor_search = "coarse" if eta_search == "warm" else eta_search
         self.alloc: Allocation = (allocate(self.fcfg, self.net,
-                                           eta_search=eta_search)
+                                           eta_search=ctor_search)
                                   if alloc is None else alloc)
         # η* prices the allocation; the training η is clamped so Lemma 2
         # still yields a non-trivial local-iteration count
-        self.eta = min(float(self.alloc.eta), 0.5) if eta is None else float(eta)
+        self.eta = (min(float(self.alloc.eta), self.fcfg.eta_train_max)
+                    if eta is None else float(eta))
+        # anchor of the 'warm' per-round η re-solve window: fixed at
+        # construction (NOT chained round-to-round) so a resumed campaign
+        # re-solves exactly what the uninterrupted one did
+        self._eta0 = self.eta
         # per-round wall-clock at the η the rounds actually train with
         # (I0/V/τ recomputed at self.eta; t_c/t_s from the allocation)
         self.timing: RoundTiming = fedsllm.simulate_round_time(
             self.fcfg, self.net, self.alloc, self.eta)
 
-        # --- model + split + jitted round function --------------------------
+        # --- model + split + jitted round functions -------------------------
         key = jax.random.PRNGKey(seed) if key is None else key
         self.state, self._axes = fedsllm.init_state(cfg, self.cut, key=key)
-        raw_round_fn = fedsllm.build_round_fn(
-            cfg, self.fcfg, self.cut, self.eta, remat=remat, dp_clip=dp_clip,
-            dp_noise=dp_noise, aggregator=aggregate,
+        # everything build_round_fn needs besides η — kept so set_eta can
+        # build additional per-η round functions with identical semantics
+        self._round_fn_kw = dict(
+            remat=remat, dp_clip=dp_clip, dp_noise=dp_noise,
+            aggregator=aggregate,
             compressor=(None if compressor == "none" else self.compressor),
             dp_seed=seed)
-
-        # trace-counting wrapper: the counter bumps only when jit (re)traces,
-        # so campaigns can assert they never recompile across rounds
+        # per-η cache: η is trace-affecting (Lemma 2's local-iteration count
+        # is a scan length), so joint per-round reallocation would recompile
+        # every round without it.  trace_count sums traces across ALL cached
+        # functions — a campaign must keep it ≤ the number of η buckets.
         self._traces = 0
-
-        def _counted_round_fn(state, batches, mask, key, weights):
-            self._traces += 1
-            return raw_round_fn(state, batches, mask, key, weights)
-
-        self._round_fn = jax.jit(_counted_round_fn)
+        self._round_fns: dict[float, Any] = {}
+        self._round_fn = self._round_fn_for(self.eta)
 
     # ------------------------------------------------------------------
 
@@ -137,6 +152,9 @@ class Experiment:
         ``run_cfg.model`` supplies the architecture (a default LoRA config is
         attached if absent), ``run_cfg.fedsllm`` the §IV system model (paper
         defaults if absent) and ``run_cfg.train.seed`` the seed.
+        ``scenario=`` selects the channel-dynamics family by name (or takes a
+        ``repro.sim.scenario.Scenario`` instance); the default ``blockfade``
+        keeps the pre-scenario semantics bit-identical.
         ``run_cfg.shape`` is *not* consumed here: batch geometry comes from
         the ``batches`` pytree handed to :meth:`run_round` (shape configs
         drive the data-stream construction at call sites).  Keyword
@@ -147,6 +165,66 @@ class Experiment:
         fcfg = run_cfg.fedsllm if run_cfg.fedsllm is not None else FedsLLMConfig()
         overrides.setdefault("seed", run_cfg.train.seed)
         return cls(run_cfg.model, fcfg, **overrides)
+
+    # ------------------------------------------------------------------
+    # per-η jitted round functions
+
+    def _round_fn_for(self, eta: float):
+        """The jitted round function for a training η (build+cache on miss).
+
+        The cache key is the exact η the function was built with; callers
+        that adopt a *solved* η* go through :meth:`set_eta`, which quantizes
+        onto the ``fcfg.eta_bucket`` grid first so the number of distinct
+        traces a campaign can accumulate is bounded by the bucket count.
+        """
+        key = round(float(eta), 10)
+        fn = self._round_fns.get(key)
+        if fn is None:
+            raw = fedsllm.build_round_fn(self.cfg, self.fcfg, self.cut, eta,
+                                         **self._round_fn_kw)
+
+            # trace-counting wrapper: bumps only when jit (re)traces, so
+            # campaigns can assert they never recompile across rounds
+            def _counted_round_fn(state, batches, mask, key, weights):
+                self._traces += 1
+                return raw(state, batches, mask, key, weights)
+
+            fn = jax.jit(_counted_round_fn)
+            self._round_fns[key] = fn
+        return fn
+
+    def set_eta(self, eta: float) -> float:
+        """Adopt a new training η (quantized), switching the round function.
+
+        ``eta`` — typically a freshly solved η* — is snapped onto the
+        ``fcfg.eta_bucket`` grid and clamped to ``fcfg.eta_train_max``; the
+        matching jitted round function is fetched from the per-η cache (built
+        on first use).  Returns the η actually adopted.  This is how
+        ``reallocate=True`` campaigns re-solve Lemma 1/2 jointly every round
+        while keeping ``trace_count`` ≤ the number of η buckets.
+        """
+        q = quantize_eta(eta, self.fcfg.eta_bucket, self.fcfg.eta_train_max)
+        if q != self.eta:
+            self.eta = q
+            self._round_fn = self._round_fn_for(q)
+        return q
+
+    def reprice_timing(self) -> RoundTiming:
+        """Re-price the simulated round timing at the current (net, alloc, η).
+
+        The campaign engine calls this after every per-round channel/η
+        update; standalone callers that mutate ``net``/``alloc`` or call
+        :meth:`set_eta` directly should too, so ``wall_clock_per_round``
+        reflects what the rounds actually cost.
+        """
+        self.timing = fedsllm.simulate_round_time(self.fcfg, self.net,
+                                                  self.alloc, self.eta)
+        return self.timing
+
+    @property
+    def eta_buckets(self) -> list[float]:
+        """The η values with a built round function (≈ compile cache keys)."""
+        return sorted(self._round_fns)
 
     # ------------------------------------------------------------------
 
@@ -162,10 +240,12 @@ class Experiment:
 
     @property
     def trace_count(self) -> int:
-        """How many times the round function has been traced (≈ compiled).
+        """Total traces (≈ compiles) across all cached round functions.
 
-        A multi-round campaign must keep this at 1: per-round masks, weights
-        and batches vary only in value, never in structure."""
+        A fixed-η campaign must keep this at 1: per-round masks, weights and
+        batches vary only in value, never in structure.  A joint-η campaign
+        (``reallocate=True``) must keep it ≤ the number of η buckets
+        (``len(eta_buckets)``) — each bucket compiles at most once."""
         return self._traces
 
     @property
@@ -225,12 +305,32 @@ class Experiment:
 
         return run_campaign(self, num_rounds, **kwargs)
 
+    @classmethod
+    def sweep(cls, run_cfg: RunConfig, **kwargs) -> "SweepResult":
+        """Fan a grid of scenarios × allocators into one tidy records table.
+
+        Builds one experiment per (scenario, allocator) cell from the same
+        ``RunConfig``, runs the same campaign through each, and returns a
+        :class:`repro.sim.sweep.SweepResult` — long-format per-round records
+        plus per-cell summaries and the paper's delay-reduction comparison
+        (``proposed`` vs ``BA``) per scenario family.  See
+        :func:`repro.sim.sweep.run_sweep` for the full contract.
+
+            res = Experiment.sweep(run_cfg, num_rounds=10, stream=stream,
+                                   scenarios=("blockfade", "geo-blockfade"),
+                                   allocators=("proposed", "BA"))
+            res.summary(), res.delay_reduction()
+        """
+        from repro.sim.sweep import run_sweep
+
+        return run_sweep(run_cfg, **kwargs)
+
     def describe(self) -> str:
         from repro.core.lora import lora_param_count
 
         return (f"Experiment[{self.cfg.name}] cut={self.cut}/{self.cfg.num_groups} "
                 f"lora={lora_param_count(self.cfg)/1e6:.2f}M "
                 f"agg={self.aggregator_name} alloc={self.allocator_name} "
-                f"codec={self.compressor_name} "
+                f"codec={self.compressor_name} scenario={self.scenario.name} "
                 f"T*={self.alloc.T:.1f}s η*={self.alloc.eta:.2f} "
                 f"round={float(np.max(self.timing.total)):.2f}s")

@@ -237,6 +237,13 @@ class FedsLLMConfig:
     sample_dim: int = 281
     # eta sweep
     eta_step: float = 0.01
+    # training-η policy (repro.api.Experiment): η* from the allocator is
+    # clamped to ≤ eta_train_max so Lemma 2 keeps a non-trivial local
+    # iteration count; joint per-round re-solves (reallocate=True) quantize
+    # the adopted η to the eta_bucket grid so the campaign reuses one jitted
+    # round function per bucket instead of recompiling every round
+    eta_train_max: float = 0.5
+    eta_bucket: float = 0.05
 
 
 @dataclass(frozen=True)

@@ -17,7 +17,9 @@ resource allocator, not device compute).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -57,13 +59,135 @@ class Network:
     B_c: float  # Hz
     B_s: float  # Hz
     f_server: float  # Hz
+    # provenance (filled by realize_network; None on the legacy all-at-once
+    # draw) — lets scenario tests assert geometry invariants across rounds
+    xy: Optional[np.ndarray] = None  # (K, 2) user positions, metres
+    pl_db: Optional[np.ndarray] = None  # (K,) distance path loss, dB
 
     @property
     def K(self) -> int:
         return len(self.g_c)
 
 
+@dataclass(frozen=True)
+class LargeScaleState:
+    """Everything about the network that outlives one fading block.
+
+    Drawn once per campaign (``sample_large_scale``) and held fixed — or
+    evolved by a mobility step — while the small-scale fading is redrawn
+    every round (``realize_network``).  The legacy ``sample_network`` path
+    conflates the two (it redraws positions with every call); scenarios that
+    promise geometry invariance compose these two halves instead.
+    """
+
+    xy: np.ndarray  # (K, 2) user positions, metres (BS at origin)
+    pl_db: np.ndarray  # (K,) distance path loss, dB
+    C_k: np.ndarray  # (K,) cycles per (sample·param)
+    D_k: np.ndarray  # (K,) local dataset sizes
+    f_max: np.ndarray  # (K,) client CPU Hz
+    p_c_max: np.ndarray  # (K,) W
+    p_s_max: np.ndarray  # (K,) W
+    N0: float  # W/Hz
+    B_c: float  # Hz
+    B_s: float  # Hz
+    f_server: float  # Hz
+
+    @property
+    def K(self) -> int:
+        return len(self.pl_db)
+
+    @property
+    def digest(self) -> str:
+        """Content hash of the large-scale realisation (checkpoint identity:
+        resuming a campaign under different geometry/heterogeneity is a
+        different campaign and must be refused)."""
+        h = hashlib.sha1()
+        for a in (self.xy, self.pl_db, self.C_k, self.D_k, self.f_max,
+                  self.p_c_max, self.p_s_max):
+            h.update(np.ascontiguousarray(np.asarray(a, float)).tobytes())
+        h.update(np.asarray([self.N0, self.B_c, self.B_s, self.f_server],
+                            float).tobytes())
+        return h.hexdigest()[:16]
+
+
+def path_loss_db(cfg: FedsLLMConfig, xy: np.ndarray) -> np.ndarray:
+    """Distance path loss 128.1 + 37.6·log10(d_km) for positions (K, 2), m."""
+    d_km = np.maximum(np.linalg.norm(xy, axis=1), 1.0) / 1000.0  # ≥1 m
+    return cfg.pathloss_const_db + cfg.pathloss_exp * np.log10(d_km)
+
+
+def sample_large_scale(cfg: FedsLLMConfig, seed: int = 0,
+                       p_max_dbm: float | None = None) -> LargeScaleState:
+    """Draw the once-per-campaign state: geometry + client heterogeneity.
+
+    Same distributions as ``sample_network`` (§IV), but no channel gains —
+    those are small-scale and belong to ``realize_network``.
+    """
+    rng = np.random.default_rng(seed)
+    K = cfg.num_clients
+    half = cfg.area_m / 2.0
+    xy = rng.uniform(-half, half, size=(K, 2))
+    p = dbm_to_watt(cfg.p_max_dbm if p_max_dbm is None else p_max_dbm)
+    return LargeScaleState(
+        xy=xy,
+        pl_db=path_loss_db(cfg, xy),
+        C_k=rng.uniform(cfg.cycles_per_param_low, cfg.cycles_per_param_high, size=K),
+        D_k=np.full(K, cfg.num_samples // K, dtype=float),
+        f_max=np.full(K, cfg.f_max_hz),
+        p_c_max=np.full(K, p),
+        p_s_max=np.full(K, p),
+        N0=dbm_to_watt(cfg.noise_psd_dbm_hz),
+        B_c=cfg.bandwidth_total_hz,
+        B_s=cfg.bandwidth_total_hz,
+        f_server=cfg.f_server_hz,
+    )
+
+
+def realize_network(cfg: FedsLLMConfig, ls: LargeScaleState, seed: int,
+                    extra_loss_db: Optional[np.ndarray] = None) -> Network:
+    """One small-scale (per-round) realisation over fixed large-scale state.
+
+    Redraws only the log-normal shadowing on both links, keyed by ``seed``;
+    geometry, path loss and client heterogeneity come from ``ls`` unchanged.
+    ``extra_loss_db`` (K,) adds a deterministic per-user deep-fade penalty on
+    top (the ``outage`` scenario's burst loss) — applied to both links.
+    """
+    rng = np.random.default_rng(seed)
+    K = ls.K
+    extra = 0.0 if extra_loss_db is None else np.asarray(extra_loss_db, float)
+
+    def gains():
+        shadow = rng.normal(0.0, cfg.shadow_std_db, size=K)
+        return db_to_lin(-(ls.pl_db + shadow + extra))
+
+    # copies, not views: callers mutate Network arrays in place (e.g. D_k
+    # reweighting) and ``ls`` may be cached/shared across rounds
+    return Network(
+        g_c=gains(),
+        g_s=gains(),
+        C_k=ls.C_k.copy(),
+        D_k=ls.D_k.copy(),
+        f_max=ls.f_max.copy(),
+        p_c_max=ls.p_c_max.copy(),
+        p_s_max=ls.p_s_max.copy(),
+        N0=ls.N0,
+        B_c=ls.B_c,
+        B_s=ls.B_s,
+        f_server=ls.f_server,
+        xy=ls.xy.copy(),
+        pl_db=ls.pl_db.copy(),
+    )
+
+
 def sample_network(cfg: FedsLLMConfig, seed: int = 0, p_max_dbm: float | None = None) -> Network:
+    """Legacy all-at-once draw: geometry + heterogeneity + gains in one shot.
+
+    BIT-FROZEN: the ``frozen``/``blockfade`` scenarios and every pre-scenario
+    campaign are keyed to this exact RNG consumption order — do not reorder
+    the draws.  New scenario families compose ``sample_large_scale`` +
+    ``realize_network`` instead, which separate what persists across rounds
+    from what fades.
+    """
     rng = np.random.default_rng(seed)
     K = cfg.num_clients
     half = cfg.area_m / 2.0

@@ -166,22 +166,6 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
     return round_fn
 
 
-def make_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
-                  xi: Optional[float] = None, delta: Optional[float] = None,
-                  remat: bool = False, dp_clip: float = 0.0,
-                  dp_noise: float = 0.0) -> Callable:
-    """Deprecated shim over :func:`build_round_fn`.
-
-    Prefer ``repro.api.Experiment`` (see ROADMAP.md "Quickstart (new API)"),
-    which wires this round function together with the channel model and the
-    resource allocator.  Kept so pre-`Experiment` call sites stay bit-exact:
-    the returned function is ``build_round_fn`` with the default uniform
-    ``federated.fedavg`` aggregator and no uplink compression.
-    """
-    return build_round_fn(cfg, fcfg, cut, eta, xi=xi, delta=delta, remat=remat,
-                          dp_clip=dp_clip, dp_noise=dp_noise)
-
-
 # ---------------------------------------------------------------------------
 # Simulated wall-clock integration (delay model + allocator)
 # ---------------------------------------------------------------------------

@@ -227,17 +227,47 @@ def solve_fixed_eta_scipy(cfg: FedsLLMConfig, net: dm.Network, eta: float,
 # ---------------------------------------------------------------------------
 
 
+def quantize_eta(eta: float, bucket: float = 0.05,
+                 eta_max: float = 0.5) -> float:
+    """Snap a solved η* onto the training-η bucket grid, clamped to
+    [bucket, eta_max].
+
+    The jitted round function's trace depends on η through Lemma 2's local
+    iteration count, so a campaign that adopts every round's exact η* would
+    recompile every round.  Quantizing to a coarse grid bounds the number of
+    distinct traces by the number of buckets (``Experiment.set_eta``).
+    """
+    if bucket <= 0:
+        raise ValueError(f"eta bucket must be positive, got {bucket}")
+    q = round(round(float(eta) / bucket) * bucket, 10)
+    return float(np.clip(q, bucket, eta_max))
+
+
 def optimize(cfg: FedsLLMConfig, net: dm.Network, strategy: str = "proposed",
              model_params=None, eta_grid: Optional[np.ndarray] = None,
-             solver: str = "exact", eta_search: str = "grid") -> Allocation:
+             solver: str = "exact", eta_search: str = "grid",
+             eta0: Optional[float] = None) -> Allocation:
     """Full optimiser.  strategy ∈ {proposed, EB, FE, BA}.
 
     eta_search='grid' is the paper-faithful 0.01-step sweep; 'coarse' runs a
     0.05-step sweep + one 0.01-step local refinement around the argmin
     (identical optimum on smooth T(η), ~6× fewer solves — used by the
-    benchmark harness)."""
+    benchmark harness); 'warm' sweeps only a ±5·eta_step window around a
+    previously solved ``eta0`` (the per-round joint re-solve of the campaign
+    engine: block fading moves T(η) but barely moves its argmin, so a local
+    window finds the same optimum ~10× cheaper — and, unlike warm-starting
+    from the *previous round's* solve, stays a pure function of the round,
+    which checkpoint resume requires)."""
     if eta_grid is None:
-        if eta_search == "coarse":
+        if eta_search == "warm":
+            if eta0 is None:
+                raise ValueError("eta_search='warm' requires eta0= "
+                                 "(the anchor of the local window)")
+            step = cfg.eta_step
+            lo = max(step, eta0 - 5.0 * step)
+            hi = min(1.0 - step, eta0 + 5.0 * step)
+            eta_grid = np.arange(lo, hi + step / 2.0, step)
+        elif eta_search == "coarse":
             eta_grid = np.arange(0.05, 1.0, 0.05)
         else:
             eta_grid = np.arange(cfg.eta_step, 1.0, cfg.eta_step)

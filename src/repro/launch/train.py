@@ -73,10 +73,11 @@ def train_fedsllm(args):
     function, the §IV channel model and the delay-minimisation allocator;
     the strategy axes are selected by name (--aggregator/--allocator/--codec).
     ``Experiment.run`` (the ``repro.sim`` campaign engine) then drives the
-    rounds: per-round channel re-sampling (disable with --freeze-channel,
-    re-solve the allocator per round with --reallocate), elastic cohorts
-    (--cohort < --clients), deadline stragglers (--deadline) and periodic
-    checkpointing with auto-resume (--ckpt-dir/--ckpt-every).
+    rounds: per-round channel evolution under the named --scenario (disable
+    with --freeze-channel; re-solve the allocator jointly per round — η
+    included — with --reallocate), elastic cohorts (--cohort < --clients),
+    deadline stragglers (--deadline) and periodic checkpointing with
+    auto-resume (--ckpt-dir/--ckpt-every).
     """
     from repro.api import Experiment
     from repro.config import RunConfig, ShapeConfig
@@ -91,7 +92,8 @@ def train_fedsllm(args):
     )
     exp = Experiment.from_config(run_cfg, eta=args.eta, lora_rank=args.lora_rank,
                                  aggregator=args.aggregator,
-                                 allocator=args.allocator, compressor=args.codec)
+                                 allocator=args.allocator, compressor=args.codec,
+                                 scenario=args.scenario)
     print(exp.describe())
 
     stream = TokenStream(args.batch, args.seq, cfg.vocab_size, seed=0)
@@ -155,6 +157,10 @@ def main():
                     help="resource-allocation strategy (repro.api.allocators)")
     ap.add_argument("--codec", default="none",
                     help="smashed-activation uplink codec (repro.api.compressors)")
+    ap.add_argument("--scenario", default="blockfade",
+                    help="channel-dynamics scenario (repro.sim.scenario): "
+                         "frozen | blockfade | geo-blockfade | drift | "
+                         "hetero | outage")
     args = ap.parse_args()
     if args.fedsllm:
         train_fedsllm(args)

@@ -1,14 +1,23 @@
 """Campaign simulation: multi-round scenarios over time-varying channels.
 
 ``campaign`` drives an ``Experiment`` through many global rounds (the engine
-behind ``Experiment.run``); ``events`` generates the per-round scenario —
-block-fading channel draws, elastic cohorts, deadline straggler masks — all
-deterministically keyed by ``(campaign_seed, round)``.
+behind ``Experiment.run``); ``scenario`` defines the channel dynamics as
+first-class, name-registered objects — ``frozen`` | ``blockfade`` |
+``geo-blockfade`` | ``drift`` | ``hetero`` | ``outage`` — splitting the
+once-per-campaign large-scale state from per-round fading; ``events``
+generates the remaining per-round events (elastic cohorts, deadline
+straggler masks, stale-allocation retiming) deterministically keyed by
+``(campaign_seed, round)``; ``sweep`` fans a grid of scenarios × allocators
+into one tidy records table (``Experiment.sweep``).
 """
 
 from repro.sim import events
 from repro.sim.campaign import (CampaignResult, RoundRecord, run_campaign,
                                 stream_batcher)
+from repro.sim.scenario import Scenario, get_scenario, scenarios
+from repro.sim.sweep import SweepResult, run_sweep
 
 __all__ = ["CampaignResult", "RoundRecord", "run_campaign", "stream_batcher",
+           "Scenario", "get_scenario", "scenarios",
+           "SweepResult", "run_sweep",
            "events"]

@@ -1,13 +1,16 @@
 """Multi-round campaign engine.
 
 Drives an :class:`repro.api.Experiment` through repeated global rounds under
-*time-varying* wireless scenarios: per-round channel re-sampling (block
-fading), optional per-round allocator re-solves, elastic cohorts via
-``federated.client_sample`` and deadline-based straggler masks derived from
-each round's simulated :class:`~repro.core.fedsllm.RoundTiming`.  The mask is
-threaded into the round function's existing ``mask`` argument, so the whole
-campaign reuses ONE jit trace — shapes, dtypes and argument structure are
-identical every round (asserted by ``tests/test_campaign.py``).
+*time-varying* wireless scenarios: per-round channel evolution delegated to
+the experiment's :class:`repro.sim.scenario.Scenario` (block fading, fixed
+geometry, mobility, device tiers, outage bursts), optional per-round joint
+allocator re-solves, elastic cohorts via ``federated.client_sample`` and
+deadline-based straggler masks derived from each round's simulated
+:class:`~repro.core.fedsllm.RoundTiming`.  The mask is threaded into the
+round function's existing ``mask`` argument, so a fixed-η campaign reuses
+ONE jit trace — shapes, dtypes and argument structure are identical every
+round — and a joint-η campaign (``reallocate=True``) is bounded by the η
+bucket count (asserted by ``tests/test_campaign.py``/``test_scenario.py``).
 
 A campaign is a pure function of ``(RunConfig, seed)``: channel draws,
 cohorts and data are all keyed by the absolute round index, so two runs of
@@ -50,6 +53,7 @@ class RoundRecord:
     timing: RoundTiming  # (K,) per-user simulated delays this round
     round_time: float  # simulated seconds this round cost the server
     cumulative_time: float  # simulated campaign wall-clock through this round
+    eta: float = 0.0  # training η this round ran at (varies under reallocate)
 
     @property
     def cohort_size(self) -> int:
@@ -75,6 +79,7 @@ class CampaignResult:
     # "num_rounds" | "lemma1" | "checkpoint" (restore already covered the
     # requested rounds — records is then empty)
     stopped_by: str
+    scenario: str = "blockfade"  # channel-dynamics family the rounds ran under
 
     @property
     def num_rounds(self) -> int:
@@ -113,6 +118,7 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                  batches_fn: Optional[Callable[[int, np.ndarray], Any]] = None,
                  cohort: Optional[int] = None,
                  resample_channel: bool = True, reallocate: bool = False,
+                 realloc_search: Optional[str] = None,
                  deadline: Optional[float] = None,
                  stop_at_lemma1: bool = False,
                  checkpoint_dir: Optional[str] = None,
@@ -129,12 +135,20 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                    then pinned to its leading axis — no elastic sampling)
 
     Scenario axes:
-      ``resample_channel``  fresh §IV network draw per round (block fading),
-          keyed by ``(campaign_seed, round)``.  With ``reallocate=False`` the
-          stale allocation is re-priced under the new gains
-          (:func:`events.retime_allocation`); with ``reallocate=True`` the
-          experiment's allocator strategy re-solves every round.  Training η
-          (and therefore the jitted round function) never changes.
+      ``resample_channel``  fresh §IV network realisation per round, drawn by
+          the experiment's *scenario* (``exp.scenario``, see
+          ``repro.sim.scenario``) keyed by ``(campaign_seed, round)`` — what
+          persists between rounds (geometry, device classes, mobility) is the
+          scenario's call.  With ``reallocate=False`` the stale allocation is
+          re-priced under the new gains (:func:`events.retime_allocation`);
+          with ``reallocate=True`` the experiment's allocator strategy
+          re-solves problems (16)/(17) *jointly* every round: the solved η*
+          is adopted (quantized to the ``fcfg.eta_bucket`` grid via
+          ``Experiment.set_eta``), so bandwidth, split AND the Lemma 1/2
+          schedule all track the channel.  ``realloc_search`` overrides the
+          per-round η-sweep mode (e.g. ``"warm"`` sweeps a local window
+          around the constructor's η — ~10× cheaper; default: the
+          experiment's ``eta_search``).
       ``cohort``    clients trained per round (< K ⇒ elastic subsampling via
           ``federated.client_sample``); default: the full population.
       ``deadline``  simulated seconds; cohort members whose round delay
@@ -145,15 +159,19 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
           state's current global round counter up to ``num_rounds``, so
           ``run(5)`` then ``run(10)`` trains rounds 0–4 then 5–9 (a second
           ``run(5)`` is a no-op, not a replay of the same scenario).
-      ``stop_at_lemma1``  cap rounds at Lemma 1's ⌈a/(1−η)⌉ budget.
+      ``stop_at_lemma1``  cap rounds at Lemma 1's ⌈a/(1−η)⌉ budget (priced
+          at the campaign's starting η).
       ``checkpoint_dir``/``checkpoint_every``  periodic + final state saves;
           ``resume=True`` restores the newest checkpoint and replays the
           remaining rounds bit-identically (everything is round-indexed).
-          Non-campaign or different-campaign checkpoints are refused.
+          Non-campaign checkpoints, and checkpoints from a different
+          campaign — seed, η, allocator, scenario name or large-scale-state
+          digest mismatch — are refused.
     """
     fcfg = exp.fcfg
     K = fcfg.num_clients
     campaign_seed = exp.seed if campaign_seed is None else campaign_seed
+    scenario = exp.scenario
 
     # --- data source ------------------------------------------------------
     provided = [x is not None for x in (batches_fn, stream, batches)]
@@ -201,9 +219,16 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                     f"checkpoint in {checkpoint_dir!r} is not a campaign "
                     f"checkpoint (no 'round' metadata — e.g. a standard-"
                     f"training save); refusing to resume from it")
-            for field, current in (("campaign_seed", campaign_seed),
-                                   ("eta", exp.eta),
-                                   ("allocator", exp.allocator_name)):
+            identity = [("campaign_seed", campaign_seed),
+                        ("allocator", exp.allocator_name),
+                        ("scenario", scenario.name),
+                        ("ls_digest", scenario.digest(fcfg, campaign_seed)),
+                        ("reallocate", reallocate)]
+            if not (reallocate and meta.get("reallocate")):
+                # under joint reallocation η is derived per-round state, not
+                # campaign identity — every resumed round re-solves it
+                identity.append(("eta", exp.eta))
+            for field, current in identity:
                 if field in meta and meta[field] != current:
                     raise ValueError(
                         f"checkpoint in {checkpoint_dir!r} is from a "
@@ -223,17 +248,25 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
     base_alloc = exp.alloc  # the last *solved* allocation (retiming input)
     records: list[RoundRecord] = []
     for r in range(start, target):
-        # (a) per-round scenario: channel draw + allocation + timing
+        # (a) per-round scenario: channel evolution + allocation + timing
         if resample_channel:
-            exp.net = events.round_network(fcfg, campaign_seed, r)
+            exp.net = events.round_network(fcfg, campaign_seed, r,
+                                           scenario=scenario)
             if reallocate:
-                base_alloc = exp._allocate(fcfg, exp.net,
-                                           eta_search=exp._eta_search)
+                # joint re-solve of problems (16)/(17) on this round's
+                # realisation; the solved η* is adopted (quantized onto the
+                # η-bucket grid) so the Lemma 1/2 schedule tracks the
+                # channel without recompiling the round function per round
+                search = exp._eta_search if realloc_search is None else realloc_search
+                kw = {"eta_search": search}
+                if search == "warm":
+                    kw["eta0"] = exp._eta0
+                base_alloc = exp._allocate(fcfg, exp.net, **kw)
                 exp.alloc = base_alloc
+                exp.set_eta(base_alloc.eta)
             else:
                 exp.alloc = events.retime_allocation(fcfg, exp.net, base_alloc)
-            exp.timing = fedsllm.simulate_round_time(fcfg, exp.net, exp.alloc,
-                                                     exp.eta)
+            exp.reprice_timing()
 
         # (b) elastic cohort + (c) deadline stragglers
         ids = (np.arange(cohort) if fixed_cohort is not None
@@ -250,28 +283,31 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
             round=r, client_ids=np.asarray(ids), mask=mask_np,
             metrics={k: float(v) for k, v in res.metrics.items()},
             alloc=exp.alloc, timing=exp.timing,
-            round_time=round_time, cumulative_time=cumulative)
+            round_time=round_time, cumulative_time=cumulative, eta=exp.eta)
         records.append(rec)
         if on_round is not None:
             on_round(rec)
 
         if ckpt is not None and checkpoint_every and (r + 1) % checkpoint_every == 0:
-            _save(ckpt, exp, r + 1, cumulative, campaign_seed)
+            _save(ckpt, exp, r + 1, cumulative, campaign_seed, reallocate)
 
     if ckpt is not None and target > start:
         saved_on_loop = checkpoint_every and target % checkpoint_every == 0
         if not saved_on_loop:
-            _save(ckpt, exp, target, cumulative, campaign_seed)
+            _save(ckpt, exp, target, cumulative, campaign_seed, reallocate)
 
     exp.campaign_time = cumulative
     return CampaignResult(records=records, state=exp.state,
                           total_time=cumulative, rounds_lemma1=rounds_lemma1,
-                          stopped_by=stopped_by)
+                          stopped_by=stopped_by, scenario=scenario.name)
 
 
 def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
-          cumulative: float, campaign_seed: int) -> None:
+          cumulative: float, campaign_seed: int, reallocate: bool) -> None:
     ckpt.save(rounds_done, exp.state,
               {"round": rounds_done, "cumulative_time": cumulative,
                "campaign_seed": campaign_seed, "eta": exp.eta,
-               "allocator": exp.allocator_name})
+               "allocator": exp.allocator_name,
+               "scenario": exp.scenario.name,
+               "ls_digest": exp.scenario.digest(exp.fcfg, campaign_seed),
+               "reallocate": reallocate})

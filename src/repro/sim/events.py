@@ -47,8 +47,17 @@ def round_seed(campaign_seed: int, round_idx: int) -> int:
 
 
 def round_network(fcfg: FedsLLMConfig, campaign_seed: int,
-                  round_idx: int) -> dm.Network:
-    """Block-fading draw: a fresh §IV network realisation keyed by round."""
+                  round_idx: int, scenario=None) -> dm.Network:
+    """The §IV network realisation round ``round_idx`` trains under.
+
+    With a ``scenario`` (see ``repro.sim.scenario``) the draw delegates to
+    ``scenario.round_network`` — the scenario decides what persists across
+    rounds and what fades.  Without one, this is the legacy ``blockfade``
+    semantics: a full fresh draw keyed by round (bit-frozen — the default
+    scenario and every pre-scenario campaign depend on it).
+    """
+    if scenario is not None:
+        return scenario.round_network(fcfg, campaign_seed, round_idx)
     return dm.sample_network(fcfg, seed=round_seed(campaign_seed, round_idx))
 
 

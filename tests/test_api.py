@@ -86,14 +86,20 @@ def test_experiment_two_rounds(run_cfg, batches):
     assert float(r2.metrics["h_c_norm"]) > 0
 
 
-def test_shim_equivalence(run_cfg, batches):
-    """make_round_fn (deprecated shim) == Experiment.run_round, bit-exact."""
+def test_build_round_fn_contract(run_cfg, batches):
+    """build_round_fn (the engine) == Experiment.run_round, bit-exact.
+
+    The former ``make_round_fn`` shim is gone; this pins the contract the
+    shim-equivalence test used to enforce directly on the engine: a
+    hand-built round function with default aggregation and no codec must
+    reproduce the Experiment's round exactly (the Experiment's D_k weights
+    are uniform on the even paper split, so weighted == unweighted)."""
     exp = Experiment.from_config(run_cfg, allocator="EB")
     res = exp.run_round(batches)
 
     state0, _ = fedsllm.init_state(exp.cfg, exp.cut, key=jax.random.PRNGKey(0))
-    shim = jax.jit(fedsllm.make_round_fn(exp.cfg, exp.fcfg, exp.cut, exp.eta))
-    state1, metrics1 = shim(state0, batches)
+    engine = jax.jit(fedsllm.build_round_fn(exp.cfg, exp.fcfg, exp.cut, exp.eta))
+    state1, metrics1 = engine(state0, batches)
 
     for a, b in zip(jax.tree.leaves((res.state.lora_c, res.state.lora_s)),
                     jax.tree.leaves((state1.lora_c, state1.lora_s))):
@@ -101,6 +107,7 @@ def test_shim_equivalence(run_cfg, batches):
     np.testing.assert_array_equal(
         np.asarray(res.metrics["loss_round_start"]),
         np.asarray(metrics1["loss_round_start"]))
+    assert not hasattr(fedsllm, "make_round_fn")  # deprecation completed
 
 
 def test_weighted_aggregation_matters(run_cfg, batches):

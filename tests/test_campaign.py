@@ -213,6 +213,10 @@ def test_reallocate_resolves_every_round(run_cfg, stream):
     a0, a1 = res.records[0].alloc, res.records[1].alloc
     assert a0.strategy == a1.strategy == "EB"
     assert a0.T != a1.T  # each round solved on its own channel draw
+    # joint η: every round trains at its own (quantized) solved η, and the
+    # per-η round-fn cache keeps compiles ≤ the number of η buckets
+    assert all(r.eta in exp.eta_buckets for r in res.records)
+    assert exp.trace_count <= len(exp.eta_buckets)
 
 
 # ---------------------------------------------------------------------------

@@ -64,7 +64,7 @@ def test_dp_round_runs_and_stays_finite():
     cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
     fcfg = FedsLLMConfig(num_clients=4)
     state, _ = fedsllm.init_state(cfg, 1)
-    round_fn = jax.jit(fedsllm.make_round_fn(cfg, fcfg, 1, eta=0.5,
+    round_fn = jax.jit(fedsllm.build_round_fn(cfg, fcfg, 1, eta=0.5,
                                              dp_clip=1.0, dp_noise=0.5))
     stream = TokenStream(2, 32, cfg.vocab_size, seed=0)
     batches = client_batches(stream, 0, 4)

@@ -1,0 +1,496 @@
+"""Scenario API: registry contract, per-family invariants, bit-compat of the
+default ``blockfade`` with the pre-scenario engine, joint-η reallocation
+trace accounting, checkpoint scenario guard, and the sweep runner."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment, get_scenario, scenarios
+from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                          get_arch, smoke_variant)
+from repro.core import delay_model as dm
+from repro.core.resource_alloc import quantize_eta
+from repro.sim import events
+from repro.sim.scenario import (DriftScenario, HeteroScenario, OutageScenario,
+                                Scenario)
+from repro.sim.sweep import run_sweep
+
+K = 6
+COHORT = 4
+
+
+@pytest.fixture(scope="module")
+def fcfg():
+    return FedsLLMConfig(num_clients=K)
+
+
+@pytest.fixture(scope="module")
+def run_cfg():
+    cfg = smoke_variant(get_arch("fedsllm-100m")).replace(
+        lora=LoRAConfig(rank=4, alpha=8.0))
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     fedsllm=FedsLLMConfig(num_clients=K))
+
+
+@pytest.fixture(scope="module")
+def stream(run_cfg):
+    from repro.data.tokens import TokenStream
+
+    return TokenStream(2, 32, run_cfg.model.vocab_size, seed=0)
+
+
+def _fresh(run_cfg, **kw):
+    kw.setdefault("allocator", "EB")
+    kw.setdefault("eta", 0.5)
+    return Experiment.from_config(run_cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract (the fourth axis mirrors the other three)
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_registry_contents():
+    assert {"frozen", "blockfade", "geo-blockfade", "drift", "hetero",
+            "outage"} <= set(scenarios.names())
+
+
+def test_unknown_scenario_lists_known_names():
+    with pytest.raises(KeyError) as exc:
+        get_scenario("definitely-not-registered")
+    for name in scenarios.names():
+        assert name in str(exc.value)
+
+
+def test_unknown_scenario_in_experiment(run_cfg):
+    with pytest.raises(KeyError, match="unknown scenario"):
+        Experiment.from_config(run_cfg, scenario="nope")
+
+
+def test_get_scenario_accepts_instances():
+    drift = DriftScenario(step_m=50.0)
+    assert get_scenario(drift) is drift
+    assert isinstance(get_scenario("drift"), DriftScenario)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: every registered scenario is a pure function of (seed, round)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted({"frozen", "blockfade",
+                                         "geo-blockfade", "drift", "hetero",
+                                         "outage"}))
+def test_scenario_deterministic_in_seed_and_round(name, fcfg):
+    sc = get_scenario(name)
+    a = sc.round_network(fcfg, campaign_seed=3, round_idx=5)
+    b = sc.round_network(fcfg, campaign_seed=3, round_idx=5)
+    for f in ("g_c", "g_s", "C_k", "D_k", "f_max"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    # a different campaign seed is a different realisation
+    c = sc.round_network(fcfg, campaign_seed=4, round_idx=5)
+    assert not np.array_equal(a.g_c, c.g_c)
+    # and the constructor draw + digest are reproducible too
+    np.testing.assert_array_equal(sc.initial_network(fcfg, 0).g_c,
+                                  sc.initial_network(fcfg, 0).g_c)
+    assert sc.digest(fcfg, 0) == sc.digest(fcfg, 0)
+
+
+@pytest.mark.parametrize("name", ["blockfade", "geo-blockfade", "drift",
+                                  "hetero", "outage"])
+def test_fading_scenarios_vary_across_rounds(name, fcfg):
+    sc = get_scenario(name)
+    assert not np.array_equal(sc.round_network(fcfg, 0, 1).g_c,
+                              sc.round_network(fcfg, 0, 2).g_c)
+
+
+# ---------------------------------------------------------------------------
+# blockfade: bit-identical to the pre-scenario (PR 2) engine
+# ---------------------------------------------------------------------------
+
+
+def test_blockfade_matches_legacy_draws(fcfg):
+    """The default scenario IS the legacy semantics: constructor draw ==
+    sample_network(seed), round draw == the round-keyed full redraw."""
+    sc = get_scenario("blockfade")
+    np.testing.assert_array_equal(sc.initial_network(fcfg, 7).g_c,
+                                  dm.sample_network(fcfg, seed=7).g_c)
+    legacy = dm.sample_network(fcfg, seed=events.round_seed(7, 3))
+    drawn = sc.round_network(fcfg, 7, 3)
+    np.testing.assert_array_equal(drawn.g_c, legacy.g_c)
+    np.testing.assert_array_equal(drawn.g_s, legacy.g_s)
+    np.testing.assert_array_equal(drawn.C_k, legacy.C_k)
+    # and events.round_network without a scenario is the same draw
+    np.testing.assert_array_equal(
+        events.round_network(fcfg, 7, 3).g_c, drawn.g_c)
+
+
+def test_default_scenario_campaign_bit_identical_to_explicit(run_cfg, stream):
+    """Experiment() == Experiment(scenario="blockfade"), bit-exact through a
+    resampled campaign (the PR 2 golden behaviour is the default)."""
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    res_default = _fresh(run_cfg).run(num_rounds=2, **kw)
+    res_named = _fresh(run_cfg, scenario="blockfade").run(num_rounds=2, **kw)
+    assert res_default.total_time == res_named.total_time
+    assert res_default.scenario == res_named.scenario == "blockfade"
+    for ra, rb in zip(res_default.records, res_named.records):
+        assert ra.metrics == rb.metrics
+    for a, b in zip(
+            jax.tree.leaves((res_default.state.lora_c, res_default.state.lora_s)),
+            jax.tree.leaves((res_named.state.lora_c, res_named.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# geo-blockfade: geometry invariance (ROADMAP open item #1)
+# ---------------------------------------------------------------------------
+
+
+def test_geo_blockfade_geometry_invariance(fcfg):
+    """Positions and path loss constant across rounds; gains still fade."""
+    sc = get_scenario("geo-blockfade")
+    nets = [sc.round_network(fcfg, 0, r) for r in range(4)]
+    for n in nets[1:]:
+        np.testing.assert_array_equal(n.xy, nets[0].xy)
+        np.testing.assert_array_equal(n.pl_db, nets[0].pl_db)
+        np.testing.assert_array_equal(n.C_k, nets[0].C_k)
+        np.testing.assert_array_equal(n.f_max, nets[0].f_max)
+        assert not np.array_equal(n.g_c, nets[0].g_c)
+    # the campaign-facing invariant: after N resampled rounds the
+    # experiment's network still sits on the campaign's large-scale draw
+    ls = sc.large_scale(fcfg, 0)
+    np.testing.assert_array_equal(nets[-1].xy, ls.xy)
+
+
+def test_geo_blockfade_campaign_keeps_geometry(run_cfg, stream):
+    exp = _fresh(run_cfg, scenario="geo-blockfade")
+    exp.run(num_rounds=3, stream=stream, cohort=COHORT,
+            resample_channel=True)
+    ls = exp.scenario.large_scale(exp.fcfg, exp.seed)
+    np.testing.assert_array_equal(exp.net.xy, ls.xy)
+    np.testing.assert_array_equal(exp.net.pl_db, ls.pl_db)
+
+
+# ---------------------------------------------------------------------------
+# frozen: resampling degenerates to the frozen-channel run
+# ---------------------------------------------------------------------------
+
+
+def test_frozen_resample_equals_frozen_run(run_cfg, stream):
+    """frozen + resample_channel=True == resample_channel=False, bit-exact:
+    the per-round "redraw" returns the same realisation, and retiming an
+    equal-bandwidth allocation under identical gains re-derives identical
+    uplink times."""
+    kw = dict(stream=stream, cohort=COHORT)
+    res_resample = _fresh(run_cfg, scenario="frozen").run(
+        num_rounds=2, resample_channel=True, **kw)
+    res_frozen = _fresh(run_cfg, scenario="frozen").run(
+        num_rounds=2, resample_channel=False, **kw)
+    assert res_resample.total_time == res_frozen.total_time
+    for ra, rb in zip(res_resample.records, res_frozen.records):
+        assert ra.metrics == rb.metrics
+        assert ra.round_time == rb.round_time
+        np.testing.assert_array_equal(ra.timing.total, rb.timing.total)
+    for a, b in zip(
+            jax.tree.leaves((res_resample.state.lora_c, res_resample.state.lora_s)),
+            jax.tree.leaves((res_frozen.state.lora_c, res_frozen.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# drift / hetero / outage family invariants
+# ---------------------------------------------------------------------------
+
+
+def test_drift_moves_users_within_the_cell(fcfg):
+    sc = get_scenario("drift")
+    n0 = sc.round_network(fcfg, 0, 0)
+    n9 = sc.round_network(fcfg, 0, 9)
+    assert not np.array_equal(n0.xy, n9.xy)  # users actually moved
+    assert not np.array_equal(n0.pl_db, n9.pl_db)  # path loss followed
+    half = fcfg.area_m / 2.0
+    assert np.all(np.abs(n9.xy) <= half)  # bounded by the cell
+    # heterogeneity is large-scale: it does NOT drift
+    np.testing.assert_array_equal(n0.C_k, n9.C_k)
+    # round 0 is the campaign's round-0 geometry (no pre-move)
+    np.testing.assert_array_equal(n0.xy, sc.large_scale(fcfg, 0).xy)
+
+
+def test_hetero_assigns_device_tiers(fcfg):
+    sc = get_scenario("hetero")
+    net = sc.round_network(fcfg, 0, 0)
+    assert set(np.unique(net.f_max)) <= set(sc.f_tiers_hz)
+    assert len(np.unique(net.f_max)) > 1  # actual heterogeneity at K=6
+    # tiers are part of the campaign identity
+    assert sc.digest(fcfg, 0) != get_scenario("geo-blockfade").digest(fcfg, 0)
+    # geometry stays fixed like geo-blockfade
+    np.testing.assert_array_equal(net.xy, sc.round_network(fcfg, 0, 5).xy)
+
+
+def test_outage_applies_exact_burst_penalty(fcfg):
+    """With prob=1 every user fades by exactly depth_db vs geo-blockfade
+    (same large-scale state, same shadowing stream); with prob=0 the two
+    scenarios coincide."""
+    geo = get_scenario("geo-blockfade")
+    sure = OutageScenario(prob=1.0, depth_db=20.0)
+    off = OutageScenario(prob=0.0)
+    g_geo = geo.round_network(fcfg, 0, 2).g_c
+    np.testing.assert_allclose(sure.round_network(fcfg, 0, 2).g_c / g_geo,
+                               dm.db_to_lin(-20.0), rtol=1e-12)
+    np.testing.assert_array_equal(off.round_network(fcfg, 0, 2).g_c, g_geo)
+
+
+def test_outage_bursts_span_whole_windows(fcfg):
+    sc = OutageScenario(prob=0.5, depth_db=30.0, burst_rounds=3)
+    # membership is constant within a window and keyed by the window index
+    for r in (0, 1, 2):
+        np.testing.assert_array_equal(sc.extra_loss_db(fcfg, 0, r),
+                                      sc.extra_loss_db(fcfg, 0, 0))
+    windows = {tuple(sc.extra_loss_db(fcfg, 0, w * 3)) for w in range(8)}
+    assert len(windows) > 1  # bursts actually switch between windows
+
+
+def test_scenario_parameter_validation():
+    with pytest.raises(ValueError, match="prob"):
+        OutageScenario(prob=1.5)
+    with pytest.raises(ValueError, match="burst_rounds"):
+        OutageScenario(burst_rounds=0)
+    with pytest.raises(ValueError, match="align"):
+        HeteroScenario(f_tiers_hz=(1e9,), p_tiers_dbm=(10.0, 4.0))
+
+
+def test_custom_scenario_subclass_pluggable(run_cfg, stream):
+    """A user-defined Scenario instance plugs straight into Experiment."""
+
+    class DoubledBandwidth(Scenario):
+        name = "custom-2xbw"
+
+        def round_large_scale(self, fcfg, campaign_seed, round_idx):
+            ls = self.large_scale(fcfg, campaign_seed)
+            return dataclasses.replace(ls, B_c=2 * ls.B_c, B_s=2 * ls.B_s)
+
+    exp = _fresh(run_cfg, scenario=DoubledBandwidth())
+    res = exp.run(num_rounds=1, stream=stream, cohort=COHORT,
+                  resample_channel=True)
+    assert res.scenario == "custom-2xbw"
+    assert exp.net.B_c == 2 * run_cfg.fedsllm.bandwidth_total_hz
+
+
+# ---------------------------------------------------------------------------
+# Joint-η reallocation: re-solve per round, bounded compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_eta_grid():
+    assert quantize_eta(0.37, 0.05, 0.5) == pytest.approx(0.35)
+    assert quantize_eta(0.99, 0.05, 0.5) == 0.5  # clamped to eta_train_max
+    assert quantize_eta(0.01, 0.05, 0.5) == pytest.approx(0.05)  # floor
+    with pytest.raises(ValueError):
+        quantize_eta(0.3, 0.0)
+
+
+def test_reallocate_resolves_eta_jointly(run_cfg, stream):
+    """reallocate=True adopts each round's solved η* (quantized): the round
+    function switches buckets without per-round recompiles — trace_count
+    stays ≤ the number of η buckets (the acceptance bar)."""
+    # constructor pinned far from EB's optimum (η* ≈ 0.95 → bucket 0.5), so
+    # the first re-solve provably switches the training η
+    exp = _fresh(run_cfg, eta=0.2, scenario="geo-blockfade")
+    assert exp.eta == 0.2
+    res = exp.run(num_rounds=3, stream=stream, cohort=COHORT,
+                  resample_channel=True, reallocate=True)
+    max_buckets = int(round(exp.fcfg.eta_train_max / exp.fcfg.eta_bucket))
+    assert exp.trace_count <= len(exp.eta_buckets) <= max_buckets
+    for rec in res.records:
+        assert rec.eta in exp.eta_buckets  # η the round actually trained at
+        assert rec.eta == quantize_eta(rec.alloc.eta, exp.fcfg.eta_bucket,
+                                       exp.fcfg.eta_train_max)
+    assert res.records[0].eta != 0.2  # the re-solve really moved η
+    # timing is priced at the adopted η, not the stale constructor η
+    assert res.records[0].alloc.eta != 0.2
+
+
+def test_set_eta_reuses_cached_round_fn(run_cfg, stream):
+    from repro.data.tokens import client_batches
+
+    exp = _fresh(run_cfg, eta=0.2)
+    batches = client_batches(stream, 0, K)
+    exp.run_round(batches)
+    assert exp.trace_count == 1
+    exp.set_eta(0.5)
+    exp.run_round(batches)
+    assert exp.trace_count == 2 and exp.eta_buckets == [0.2, 0.5]
+    exp.set_eta(0.2)  # back to the first bucket: cached, no new trace
+    exp.set_eta(0.52)  # quantizes onto the existing 0.5 bucket
+    assert exp.eta == 0.5
+    exp.run_round(batches)
+    assert exp.trace_count == 2
+
+
+def test_warm_search_matches_full_sweep_near_anchor(fcfg):
+    """eta_search='warm' around the full-sweep optimum finds the same T*."""
+    from repro.core import resource_alloc as ra
+
+    net = dm.sample_network(fcfg, seed=1)
+    full = ra.optimize(fcfg, net, "EB", eta_search="coarse")
+    warm = ra.optimize(fcfg, net, "EB", eta_search="warm", eta0=full.eta)
+    assert warm.T <= full.T * (1 + 1e-9)
+    with pytest.raises(ValueError, match="eta0"):
+        ra.optimize(fcfg, net, "EB", eta_search="warm")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint scenario guard
+# ---------------------------------------------------------------------------
+
+
+def test_resume_refuses_different_scenario(run_cfg, stream, tmp_path):
+    ckpt = str(tmp_path / "camp")
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    _fresh(run_cfg, scenario="geo-blockfade").run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    with pytest.raises(ValueError, match="scenario"):
+        _fresh(run_cfg, scenario="drift").run(
+            num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    # the same scenario resumes fine
+    res = _fresh(run_cfg, scenario="geo-blockfade").run(
+        num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    assert [r.round for r in res.records] == [2, 3]
+
+
+def test_digest_covers_dynamics_params(fcfg):
+    """Same scenario name + same large-scale draw but different dynamics
+    knobs is a different campaign — the digest must tell them apart (a
+    resumed drift walk with another step size would silently diverge)."""
+    assert (DriftScenario(step_m=20.0).digest(fcfg, 0)
+            != DriftScenario(step_m=50.0).digest(fcfg, 0))
+    assert (OutageScenario(prob=0.1).digest(fcfg, 0)
+            != OutageScenario(prob=0.3).digest(fcfg, 0))
+    assert (HeteroScenario().digest(fcfg, 0)
+            != HeteroScenario(f_tiers_hz=(1e9,), p_tiers_dbm=(10.0,))
+            .digest(fcfg, 0))
+
+
+def test_resume_refuses_different_drift_step(run_cfg, stream, tmp_path):
+    ckpt = str(tmp_path / "camp")
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    _fresh(run_cfg, scenario=DriftScenario(step_m=20.0)).run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    with pytest.raises(ValueError, match="ls_digest"):
+        _fresh(run_cfg, scenario=DriftScenario(step_m=50.0)).run(
+            num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+
+
+def test_warm_eta_search_usable_from_constructor(run_cfg, stream):
+    """eta_search='warm' at construction must not crash: the initial solve
+    produces the anchor with a coarse sweep, per-round re-solves warm-start
+    off it."""
+    exp = _fresh(run_cfg, eta=None, eta_search="warm")
+    res = exp.run(num_rounds=1, stream=stream, cohort=COHORT,
+                  resample_channel=True, reallocate=True)
+    assert res.num_rounds == 1 and np.isfinite(res.records[0].alloc.T)
+
+
+def test_resume_refuses_different_large_scale_digest(run_cfg, stream,
+                                                     tmp_path):
+    """Same scenario name, different geometry realisation (area changed) —
+    the large-scale digest catches what the name cannot."""
+    ckpt = str(tmp_path / "camp")
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    _fresh(run_cfg, scenario="geo-blockfade").run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    other_cfg = RunConfig(
+        model=run_cfg.model, shape=run_cfg.shape,
+        fedsllm=dataclasses.replace(run_cfg.fedsllm, area_m=1000.0))
+    with pytest.raises(ValueError, match="ls_digest"):
+        _fresh(other_cfg, scenario="geo-blockfade").run(
+            num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+
+
+def test_realloc_campaign_resumes_bit_identical(run_cfg, stream, tmp_path):
+    """Joint-η campaigns stay pure functions of (RunConfig, seed): resuming
+    re-solves each remaining round exactly as the uninterrupted run did (η
+    is derived per-round state, so it must not block the resume)."""
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True,
+              reallocate=True)
+    full = _fresh(run_cfg, eta=0.2, scenario="geo-blockfade").run(
+        num_rounds=4, **kw)
+
+    ckpt = str(tmp_path / "camp")
+    _fresh(run_cfg, eta=0.2, scenario="geo-blockfade").run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    rest = _fresh(run_cfg, eta=0.2, scenario="geo-blockfade").run(
+        num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    assert [r.round for r in rest.records] == [2, 3]
+    for ra_, rb in zip(full.records[2:], rest.records):
+        assert ra_.metrics == rb.metrics and ra_.eta == rb.eta
+    for a, b in zip(jax.tree.leaves((full.state.lora_c, full.state.lora_s)),
+                    jax.tree.leaves((rest.state.lora_c, rest.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Sweep runner
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sweep_res(run_cfg, stream):
+    return run_sweep(run_cfg, 2, scenarios=("blockfade", "geo-blockfade"),
+                     allocators=("EB", "BA"), stream=stream, cohort=COHORT,
+                     exp_overrides={"cut": 1})
+
+
+def test_sweep_produces_tidy_records(sweep_res):
+    assert len(sweep_res.records) == 2 * 2 * 2  # scenarios × allocators × rounds
+    for row in sweep_res.records:
+        assert {"scenario", "allocator", "round", "eta", "round_time",
+                "cumulative_time", "loss_round_start"} <= set(row)
+    cell = sweep_res.cell("blockfade", "EB")
+    assert [r["round"] for r in cell] == [0, 1]
+    summary = sweep_res.summary()
+    assert len(summary) == 4
+    for row in summary:
+        assert row["rounds"] == 2 and row["trace_count"] == 1
+        assert row["total_time"] > 0
+
+
+def test_sweep_delay_reduction_eb_beats_ba(sweep_res):
+    """EB (optimised η) must beat BA (η fixed at 0.1) on simulated delay in
+    every scenario family — the paper's comparison, per family."""
+    red = sweep_res.delay_reduction(allocator="EB", baseline="BA")
+    assert set(red) == {"blockfade", "geo-blockfade"}
+    for pct in red.values():
+        assert 0 < pct < 100
+
+
+def test_sweep_json_artifact(sweep_res, tmp_path):
+    import json
+
+    path = sweep_res.to_json(str(tmp_path / "sweep.json"))
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["num_rounds"] == 2
+    assert len(payload["records"]) == len(sweep_res.records)
+    assert payload["summary"]
+    red = payload["delay_reduction"]
+    assert red["allocator"] == "EB" and red["baseline"] == "BA"
+    assert set(red["pct_by_scenario"]) == {"blockfade", "geo-blockfade"}
+
+    # a single-allocator grid has nothing to compare — no fabricated 0%
+    from repro.sim.sweep import SweepResult
+
+    solo = SweepResult(records=[], scenarios=("frozen",), allocators=("BA",),
+                       num_rounds=0)
+    with open(solo.to_json(str(tmp_path / "solo.json"))) as f:
+        assert json.load(f)["delay_reduction"] is None
+
+
+def test_experiment_sweep_classmethod(run_cfg, stream):
+    res = Experiment.sweep(run_cfg, num_rounds=1, scenarios=("frozen",),
+                           allocators=("BA",), stream=stream, cohort=COHORT,
+                           exp_overrides={"cut": 1})
+    assert len(res.records) == 1 and res.records[0]["scenario"] == "frozen"

@@ -22,7 +22,7 @@ def test_fedsllm_round_runs_and_learns(small_cfg):
     fcfg = FedsLLMConfig(num_clients=4)
     cut = 1
     state, _ = fedsllm.init_state(small_cfg, cut)
-    round_fn = jax.jit(fedsllm.make_round_fn(small_cfg, fcfg, cut, eta=0.5))
+    round_fn = jax.jit(fedsllm.build_round_fn(small_cfg, fcfg, cut, eta=0.5))
     stream = TokenStream(2, 32, small_cfg.vocab_size, seed=0)
     losses = []
     for r in range(6):
@@ -37,7 +37,7 @@ def test_fedsllm_straggler_mask(small_cfg):
     """Dropping one client via mask still yields finite updates."""
     fcfg = FedsLLMConfig(num_clients=4)
     state, _ = fedsllm.init_state(small_cfg, 1)
-    round_fn = jax.jit(fedsllm.make_round_fn(small_cfg, fcfg, 1, eta=0.5))
+    round_fn = jax.jit(fedsllm.build_round_fn(small_cfg, fcfg, 1, eta=0.5))
     stream = TokenStream(2, 32, small_cfg.vocab_size, seed=0)
     batches = client_batches(stream, 0, 4)
     mask = jnp.array([1.0, 1.0, 1.0, 0.0])
