@@ -15,6 +15,25 @@ runner class changes (or proves noisier than 10%), re-bless the baseline
 from a CI run's uploaded BENCH_round artifact (or raise ``--threshold``)
 rather than chasing phantom regressions.
 
+Per-entry thresholds: a baseline entry may carry its own ``"threshold"``
+field, overriding ``--threshold`` for that entry — used for benches whose
+measured run-to-run variance exceeds the 10% default.  Measured over four
+back-to-back runs of ``run.py solver`` on one machine: ``solver_exact``
+swung 1.30/1.57/1.32/1.69 s (~30% — sub-2 s of host numpy, sensitive to
+machine load), ``solver_scipy_fmincon_eq`` held within ~5%.  Hence
+``solver_exact`` gates at 50% (a real algorithmic regression — e.g. losing
+the Lambert-W closed form — is a multiple, not a percentage) and
+``solver_scipy_fmincon_eq`` at 25%.  ``--update`` preserves the per-entry
+thresholds already in the baseline.
+
+The kernel micro-benches (``kernel_*``) stay UNGATED deliberately: they
+report sub-millisecond CPU-reference timings whose run-to-run spread is
+timer noise at this scale (the ``--min-us`` floor would mask any real
+signal anyway), and the derived numbers that matter — the v5e roofline
+projections — are analytic, not measured.  Gate them only after their CI
+variance is measured and a repeat-count that stabilises them is chosen.
+
+    PYTHONPATH=src:. python benchmarks/run.py solver
     PYTHONPATH=src python benchmarks/run.py campaign
     PYTHONPATH=src python benchmarks/compare.py            # gate
     PYTHONPATH=src python benchmarks/compare.py --update   # bless current
@@ -25,7 +44,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import shutil
 import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -53,14 +71,18 @@ def compare(current: dict, baseline: dict, threshold: float,
                          f"baseline it with --update")
             continue
         b, c = float(base["us_per_call"]), float(cur["us_per_call"])
+        # a noisy bench can carry its own gate width in the baseline
+        thr = float(base.get("threshold", threshold))
         delta = (c - b) / b if b > 0 else 0.0
         tag = "ok"
-        if c > b * (1.0 + threshold) and c - b > min_us:
+        if c > b * (1.0 + thr) and c - b > min_us:
             tag = "REGRESSION"
             regressions.append(name)
-        elif c < b * (1.0 - threshold):
+        elif c < b * (1.0 - thr):
             tag = "improved"
-        lines.append(f"  {name}: {b:.1f} -> {c:.1f} us ({delta:+.1%}) {tag}")
+        note = f" [gate {thr:.0%}]" if thr != threshold else ""
+        lines.append(f"  {name}: {b:.1f} -> {c:.1f} us ({delta:+.1%}) "
+                     f"{tag}{note}")
     return lines, regressions
 
 
@@ -84,7 +106,15 @@ def main(argv=None) -> int:
               f"first", file=sys.stderr)
         return 2
     if args.update:
-        shutil.copyfile(args.current, args.baseline)
+        current = load(args.current)
+        try:  # keep the per-entry gate widths of the old baseline
+            for name, entry in load(args.baseline).items():
+                if "threshold" in entry and name in current:
+                    current[name]["threshold"] = entry["threshold"]
+        except (OSError, ValueError):
+            pass
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
         print(f"baseline updated: {os.path.relpath(args.baseline)}")
         return 0
     if not os.path.exists(args.baseline):

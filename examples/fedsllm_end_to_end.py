@@ -15,6 +15,8 @@
 
     PYTHONPATH=src python examples/fedsllm_end_to_end.py
     PYTHONPATH=src python examples/fedsllm_end_to_end.py --scenario drift
+    PYTHONPATH=src python examples/fedsllm_end_to_end.py \
+        --topology edge-cloud --scenario geo-blockfade
 """
 
 import argparse
@@ -22,10 +24,10 @@ import time
 
 import numpy as np
 
-from repro.api import Experiment, allocators, get_scenario, scenarios
+from repro.api import (Experiment, allocators, get_scenario, get_topology,
+                       scenarios, topologies)
 from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
                           get_arch, smoke_variant)
-from repro.core import fedsllm
 from repro.data.tokens import TokenStream
 
 COHORT = 8  # clients trained per round (of the K=50 simulated radio users)
@@ -36,19 +38,29 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="blockfade",
                     help=f"channel dynamics, one of {scenarios.names()}")
+    ap.add_argument("--topology", default="star",
+                    help=f"network graph, one of {topologies.names()}; "
+                         f"non-star needs a geometry scenario "
+                         f"(e.g. --scenario geo-blockfade)")
     args = ap.parse_args()
     # unknown names fail fast with the knowns listed, like every registry
     scenario = get_scenario(args.scenario)
+    topology = get_topology(args.topology)
 
     # --- model: LoRA-adapted small LM, split at A_min of the depth ---------
     cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
     fcfg = FedsLLMConfig(num_clients=50)
 
     # --- paper §IV wireless simulation + problem (17), every strategy ------
-    net = scenario.initial_network(fcfg, seed=0)
+    # (hierarchical graphs re-anchor each client on its attached edge and
+    # solve per edge cell — the same registry strategies, combined)
+    net, assign = topology.localize(fcfg, scenario.initial_network(fcfg,
+                                                                   seed=0))
     alloc = {}
     for strat in allocators.names():  # BA / EB / FE / proposed
-        alloc[strat] = allocators.get(strat)(fcfg, net, eta_search="coarse")
+        alloc[strat] = topology.allocate(fcfg, net, assign,
+                                         allocators.get(strat),
+                                         strategy=strat, eta_search="coarse")
         print(f"  {strat:9s}: T*={alloc[strat].T:10.1f}s  η={alloc[strat].eta:.2f}")
     best = alloc["proposed"]
     print(f"  reduction vs BA: {100*(1-best.T/alloc['BA'].T):.2f}% (paper avg: 47.63%)")
@@ -59,7 +71,8 @@ def main():
     # under each draw, and clients missing the deadline are masked out. -----
     run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"], fedsllm=fcfg)
     exp = Experiment.from_config(run_cfg, allocator="proposed", net=net,
-                                 alloc=best, scenario=scenario)
+                                 alloc=best, scenario=scenario,
+                                 topology=topology)
     print(exp.describe())
     deadline = float(np.quantile(exp.timing.total, 0.8))  # cuts slowest ~20%
 
@@ -77,7 +90,7 @@ def main():
                   deadline=deadline, resample_channel=True, on_round=log)
 
     ba_round = float(np.max(
-        fedsllm.simulate_round_time(fcfg, net, alloc["BA"], 0.1).total))
+        topology.round_timing(fcfg, net, alloc["BA"], 0.1, assign).total))
     print(f"\n{res.num_rounds} rounds in {time.time()-t0:.1f}s real, "
           f"{res.total_time:.1f}s simulated wireless time, "
           f"straggler rate {res.straggler_rate:.1%}, "

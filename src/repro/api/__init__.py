@@ -30,18 +30,25 @@ known ones):
                    are the stable in-loop choices, see the module docstring)
   ``scenarios``    channel dynamics across campaign rounds: ``frozen`` |
                    ``blockfade`` (default, the legacy bit-frozen semantics) |
-                   ``geo-blockfade`` | ``drift`` | ``hetero`` | ``outage`` —
-                   each splits the once-per-campaign large-scale state from
-                   per-round fading (``repro.sim.scenario``)
+                   ``geo-blockfade`` | ``drift`` | ``hetero`` | ``outage`` |
+                   ``shadowing`` (AR(1)-correlated) — each splits the
+                   once-per-campaign large-scale state from per-round
+                   fading (``repro.sim.scenario``)
+  ``topologies``   the network graph: ``star`` (default, the legacy flat
+                   FedsLLM graph, bit-identical) | ``edge-cloud`` |
+                   ``edge-agg`` | ``relay`` — multi-hop client→edge→cloud
+                   splits with per-hop delay composition and per-edge-cell
+                   resource allocation (``repro.net.topology``)
 
-``Experiment.sweep`` fans a grid of scenarios × allocators into one tidy
-records table (``repro.sim.sweep``) for cross-scenario comparisons.
+``Experiment.sweep`` fans a grid of topologies × scenarios × allocators into
+one tidy records table (``repro.sim.sweep``) for cross-family comparisons.
 """
 
 from repro.api.aggregators import aggregators, get_aggregator
 from repro.api.allocators import allocators, get_allocator
 from repro.api.compressors import Compressor, compressors, get_compressor
 from repro.api.experiment import Experiment, RoundResult
+from repro.net.topology import Topology, get_topology, topologies
 from repro.registry import Registry
 from repro.sim.campaign import CampaignResult, RoundRecord
 from repro.sim.scenario import Scenario, get_scenario, scenarios
@@ -55,4 +62,5 @@ __all__ = [
     "allocators", "get_allocator",
     "compressors", "get_compressor", "Compressor",
     "scenarios", "get_scenario", "Scenario",
+    "topologies", "get_topology", "Topology",
 ]

@@ -34,6 +34,7 @@ from repro.core import delay_model as dm
 from repro.core import fedsllm
 from repro.core.fedsllm import FedsLLMState, RoundTiming
 from repro.core.resource_alloc import Allocation, quantize_eta
+from repro.net.topology import Topology, get_topology
 
 
 @dataclass
@@ -65,6 +66,7 @@ class Experiment:
                  aggregator: str = "weighted", allocator: str = "proposed",
                  compressor: str = "none", compressor_kw: Optional[dict] = None,
                  scenario: Union[str, "Scenario"] = "blockfade",
+                 topology: Union[str, Topology] = "star",
                  seed: int = 0, remat: bool = False, dp_clip: float = 0.0,
                  dp_noise: float = 0.0, eta_search: str = "coarse",
                  lora_rank: int = 8, key: Optional[jax.Array] = None,
@@ -89,6 +91,10 @@ class Experiment:
         # the scenario decides how the wireless network evolves across
         # campaign rounds (channel dynamics axis; name or Scenario instance)
         self.scenario = get_scenario(scenario)
+        # the topology decides the network *graph* — who talks to whom over
+        # which hop (5th axis; ``star`` is the legacy flat graph and leaves
+        # every path below bit-identical)
+        self.topology = get_topology(topology)
         # campaign engine re-solves (reallocate=True) with the same strategy
         self._allocate = allocate
         self._eta_search = eta_search
@@ -105,25 +111,31 @@ class Experiment:
             fcfg, s_bits=fcfg.s_bits * self.compressor.ratio)
         self.net = (self.scenario.initial_network(self.fcfg, seed)
                     if net is None else net)
+        # hierarchical topologies re-anchor the wireless hop on each
+        # client's attached edge; ``star`` is the identity (assign=None)
+        self.net, self.assign = self.topology.localize(self.fcfg, self.net)
         # 'warm' needs an anchor η that doesn't exist yet at construction:
         # the initial solve runs the coarse sweep to *produce* the anchor,
         # and per-round re-solves (reallocate=True) then warm-start off it
         ctor_search = "coarse" if eta_search == "warm" else eta_search
-        self.alloc: Allocation = (allocate(self.fcfg, self.net,
-                                           eta_search=ctor_search)
-                                  if alloc is None else alloc)
+        self.alloc: Allocation = (
+            self.topology.allocate(self.fcfg, self.net, self.assign, allocate,
+                                   strategy=allocator, eta_search=ctor_search)
+            if alloc is None else alloc)
         # η* prices the allocation; the training η is clamped so Lemma 2
         # still yields a non-trivial local-iteration count
         self.eta = (min(float(self.alloc.eta), self.fcfg.eta_train_max)
                     if eta is None else float(eta))
-        # anchor of the 'warm' per-round η re-solve window: fixed at
-        # construction (NOT chained round-to-round) so a resumed campaign
-        # re-solves exactly what the uninterrupted one did
-        self._eta0 = self.eta
+        # anchor of the 'warm' per-round η re-solve window: the η* the
+        # constructor solve produced (NOT the clamped training η, and NOT
+        # chained round-to-round) — fixed at construction so a resumed
+        # campaign re-solves exactly what the uninterrupted one did
+        self._eta0 = float(self.alloc.eta)
         # per-round wall-clock at the η the rounds actually train with
-        # (I0/V/τ recomputed at self.eta; t_c/t_s from the allocation)
-        self.timing: RoundTiming = fedsllm.simulate_round_time(
-            self.fcfg, self.net, self.alloc, self.eta)
+        # (I0/V/τ recomputed at self.eta; t_c/t_s from the allocation;
+        # hierarchical topologies add the backhaul hop of each client's path)
+        self.timing: RoundTiming = self.topology.round_timing(
+            self.fcfg, self.net, self.alloc, self.eta, self.assign)
 
         # --- model + split + jitted round functions -------------------------
         key = jax.random.PRNGKey(seed) if key is None else key
@@ -134,7 +146,7 @@ class Experiment:
             remat=remat, dp_clip=dp_clip, dp_noise=dp_noise,
             aggregator=aggregate,
             compressor=(None if compressor == "none" else self.compressor),
-            dp_seed=seed)
+            dp_seed=seed, two_tier=self.topology.two_tier)
         # per-η cache: η is trace-affecting (Lemma 2's local-iteration count
         # is a scan length), so joint per-round reallocation would recompile
         # every round without it.  trace_count sums traces across ALL cached
@@ -154,7 +166,11 @@ class Experiment:
         defaults if absent) and ``run_cfg.train.seed`` the seed.
         ``scenario=`` selects the channel-dynamics family by name (or takes a
         ``repro.sim.scenario.Scenario`` instance); the default ``blockfade``
-        keeps the pre-scenario semantics bit-identical.
+        keeps the pre-scenario semantics bit-identical.  ``topology=``
+        selects the network graph (``repro.net.topology``): ``star`` (the
+        flat default, bit-identical to the pre-topology engine) |
+        ``edge-cloud`` | ``edge-agg`` | ``relay`` — non-star topologies
+        need a geometry-carrying scenario (e.g. ``geo-blockfade``).
         ``run_cfg.shape`` is *not* consumed here: batch geometry comes from
         the ``batches`` pytree handed to :meth:`run_round` (shape configs
         drive the data-stream construction at call sites).  Keyword
@@ -185,9 +201,10 @@ class Experiment:
 
             # trace-counting wrapper: bumps only when jit (re)traces, so
             # campaigns can assert they never recompile across rounds
-            def _counted_round_fn(state, batches, mask, key, weights):
+            def _counted_round_fn(state, batches, mask, key, weights,
+                                  assign=None):
                 self._traces += 1
-                return raw(state, batches, mask, key, weights)
+                return raw(state, batches, mask, key, weights, assign)
 
             fn = jax.jit(_counted_round_fn)
             self._round_fns[key] = fn
@@ -215,10 +232,12 @@ class Experiment:
         The campaign engine calls this after every per-round channel/η
         update; standalone callers that mutate ``net``/``alloc`` or call
         :meth:`set_eta` directly should too, so ``wall_clock_per_round``
-        reflects what the rounds actually cost.
+        reflects what the rounds actually cost.  Hierarchical topologies
+        compose the backhaul hop into every client's critical path.
         """
-        self.timing = fedsllm.simulate_round_time(self.fcfg, self.net,
-                                                  self.alloc, self.eta)
+        self.timing = self.topology.round_timing(self.fcfg, self.net,
+                                                 self.alloc, self.eta,
+                                                 self.assign)
         return self.timing
 
     @property
@@ -271,15 +290,25 @@ class Experiment:
         ``key``: optional PRNG key for the DP noise; when None, a per-round
         key is derived inside the trace from the experiment seed and the
         global round counter (so noise never repeats across rounds).
+
+        Under a two-tier topology (``edge-agg``) the cohort's one-hot
+        client→edge membership rides along as a value-only argument, so the
+        per-edge aggregation tracks re-attachment without retracing.
         """
         C = jax.tree.leaves(batches)[0].shape[0]
+        ids = (np.arange(C) if client_ids is None
+               else np.asarray(client_ids))
         if client_ids is None:
             weights = self.client_weights(C)
         else:
-            weights = jnp.asarray(self.net.D_k[np.asarray(client_ids)],
-                                  jnp.float32)
+            weights = jnp.asarray(self.net.D_k[ids], jnp.float32)
+        assign = None
+        if self.topology.two_tier and self.assign is not None:
+            M = self.topology.num_edges
+            assign = jnp.asarray(
+                np.eye(M, dtype=np.float32)[np.asarray(self.assign)[ids]])
         self.state, metrics = self._round_fn(self.state, batches, mask, key,
-                                             weights)
+                                             weights, assign)
         return RoundResult(self.state, metrics, self.timing)
 
     def run(self, num_rounds: Optional[int] = None, **kwargs) -> "CampaignResult":
@@ -332,5 +361,6 @@ class Experiment:
                 f"lora={lora_param_count(self.cfg)/1e6:.2f}M "
                 f"agg={self.aggregator_name} alloc={self.allocator_name} "
                 f"codec={self.compressor_name} scenario={self.scenario.name} "
+                f"topo={self.topology.name} "
                 f"T*={self.alloc.T:.1f}s η*={self.alloc.eta:.2f} "
                 f"round={float(np.max(self.timing.total)):.2f}s")

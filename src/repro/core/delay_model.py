@@ -144,27 +144,33 @@ def sample_large_scale(cfg: FedsLLMConfig, seed: int = 0,
 
 
 def realize_network(cfg: FedsLLMConfig, ls: LargeScaleState, seed: int,
-                    extra_loss_db: Optional[np.ndarray] = None) -> Network:
+                    extra_loss_db: Optional[np.ndarray] = None,
+                    shadow_db: Optional[np.ndarray] = None) -> Network:
     """One small-scale (per-round) realisation over fixed large-scale state.
 
     Redraws only the log-normal shadowing on both links, keyed by ``seed``;
     geometry, path loss and client heterogeneity come from ``ls`` unchanged.
     ``extra_loss_db`` (K,) adds a deterministic per-user deep-fade penalty on
     top (the ``outage`` scenario's burst loss) — applied to both links.
+    ``shadow_db`` (2, K) overrides the i.i.d. shadowing draw with caller-
+    provided per-link fields (row 0 → fed link, row 1 → main link) — the
+    ``shadowing`` scenario's temporally-correlated AR(1) process; the RNG is
+    then not consumed, so the existing i.i.d. draw order stays bit-frozen.
     """
     rng = np.random.default_rng(seed)
     K = ls.K
     extra = 0.0 if extra_loss_db is None else np.asarray(extra_loss_db, float)
 
-    def gains():
-        shadow = rng.normal(0.0, cfg.shadow_std_db, size=K)
+    def gains(link: int):
+        shadow = (rng.normal(0.0, cfg.shadow_std_db, size=K)
+                  if shadow_db is None else np.asarray(shadow_db[link], float))
         return db_to_lin(-(ls.pl_db + shadow + extra))
 
     # copies, not views: callers mutate Network arrays in place (e.g. D_k
     # reweighting) and ``ls`` may be cached/shared across rounds
     return Network(
-        g_c=gains(),
-        g_s=gains(),
+        g_c=gains(0),
+        g_s=gains(1),
         C_k=ls.C_k.copy(),
         D_k=ls.D_k.copy(),
         f_max=ls.f_max.copy(),

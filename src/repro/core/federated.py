@@ -110,6 +110,40 @@ def trimmed_mean(stacked, weights: Optional[jax.Array] = None,
     return jax.tree.map(one, stacked)
 
 
+def hier_aggregate(aggregate, stacked, assign,
+                   weights: Optional[jax.Array] = None,
+                   mask: Optional[jax.Array] = None):
+    """Two-tier reduction: per-edge aggregate, then aggregate across edges.
+
+    The hierarchical (``edge-agg``) topology's fed-server role is split: each
+    edge reduces its own clients' updates before the backhaul hop, the cloud
+    reduces the edge aggregates.  ``assign`` is the cohort's one-hot
+    membership matrix (K, M) — a *value-only* argument (static shape), so
+    per-round re-attachment never retraces the round function.  Both tiers
+    use the same base ``aggregate`` callable: membership enters tier 1 as a
+    mask (composed with the straggler mask), and tier 2 weighs each edge by
+    its surviving clients' total weight (empty cells are masked out).  For
+    (weighted) fedavg the two-tier result equals the flat reduction up to
+    float associativity; robust aggregators become per-edge robust.
+    """
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return stacked
+    K, M = assign.shape
+    w = jnp.ones(K, jnp.float32) if weights is None else weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    per_edge, edge_w = [], []
+    for m in range(M):  # M is small and static — unrolled in the trace
+        member = assign[:, m]
+        cell_mask = member if mask is None else member * mask.astype(jnp.float32)
+        per_edge.append(aggregate(stacked, weights=weights, mask=cell_mask))
+        edge_w.append(jnp.sum(w * member))
+    stacked_edges = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_edge)
+    ew = jnp.stack(edge_w)
+    return aggregate(stacked_edges, weights=ew, mask=(ew > 0).astype(jnp.float32))
+
+
 def apply_update(global_tree, avg_h, scale: float = 1.0):
     """Δw ← Δw + scale·mean_k h_k (Algorithm 1 update)."""
     return jax.tree.map(

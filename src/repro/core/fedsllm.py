@@ -67,15 +67,20 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
                    xi: Optional[float] = None, delta: Optional[float] = None,
                    remat: bool = False, dp_clip: float = 0.0,
                    dp_noise: float = 0.0, aggregator: Optional[Callable] = None,
-                   compressor=None, dp_seed: int = 0) -> Callable:
+                   compressor=None, dp_seed: int = 0,
+                   two_tier: bool = False) -> Callable:
     """Build the jittable global-round function (the `repro.api` engine).
 
-    round_fn(state, batches, mask=None, key=None, weights=None)
+    round_fn(state, batches, mask=None, key=None, weights=None, assign=None)
         -> (state', metrics)
     batches: pytree with leaves stacked (K, ...) — one micro-dataset/client.
     mask: (K,) survivors (straggler tolerance), or None.
     weights: (K,) aggregation weights, e.g. data sizes D_k (paper's weighted
     FedAvg); None = uniform.
+    assign: (K, M) one-hot client→edge membership — only consumed when
+    ``two_tier=True`` (the ``edge-agg`` topology): every aggregation becomes
+    per-edge then cross-edge (``federated.hier_aggregate``).  Like ``mask``
+    it is a value-only argument: per-round re-attachment keeps one jit trace.
     aggregator: callable (stacked, weights=None, mask=None) -> tree; default
     ``federated.fedavg``.  Applied to both the round-start gradient average ḡ
     and the uploaded update average (Algorithm 1's fed-server reduction).
@@ -124,14 +129,22 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
         h, losses = jax.lax.scan(body, h0, None, length=I_loc)
         return h[0], h[1], losses[-1]
 
-    def round_fn(state: FedsLLMState, batches, mask=None, key=None, weights=None):
+    def round_fn(state: FedsLLMState, batches, mask=None, key=None,
+                 weights=None, assign=None):
         K = jax.tree.leaves(batches)[0].shape[0]
+        if two_tier and assign is not None:
+            # hierarchical fed-server role: per-edge then cross-edge
+            def agg(tree):
+                return federated.hier_aggregate(aggregate, tree, assign,
+                                                weights=weights, mask=mask)
+        else:
+            def agg(tree):
+                return aggregate(tree, weights=weights, mask=mask)
         # 2. round-start gradients per client (h=0)
         loss0, g0 = jax.vmap(lambda b: client_grads(state.base, state.lora_c,
                                                     state.lora_s, b))(batches)
         # ḡ = ∇F(Δw) — fed-server aggregation (paper: uplink s_c per client)
-        gbar = (aggregate(g0[0], weights=weights, mask=mask),
-                aggregate(g0[1], weights=weights, mask=mask))
+        gbar = (agg(g0[0]), agg(g0[1]))
 
         # 3. local iterations (vmapped over clients)
         h_c, h_s, last_loss = jax.vmap(
@@ -150,10 +163,8 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
                                                  noise_multiplier=dp_noise)
 
         # 4. aggregate + update (fed server for Δw_c, main server for Δw_s)
-        new_lc = federated.apply_update(state.lora_c,
-                                        aggregate(h_c, weights=weights, mask=mask))
-        new_ls = federated.apply_update(state.lora_s,
-                                        aggregate(h_s, weights=weights, mask=mask))
+        new_lc = federated.apply_update(state.lora_c, agg(h_c))
+        new_ls = federated.apply_update(state.lora_s, agg(h_s))
         metrics = {
             "loss_round_start": jnp.mean(loss0),
             "loss_local_final": jnp.mean(last_loss),

@@ -243,6 +243,38 @@ def quantize_eta(eta: float, bucket: float = 0.05,
     return float(np.clip(q, bucket, eta_max))
 
 
+def eta_grid_for(cfg: FedsLLMConfig, eta_search: str = "grid",
+                 eta0: Optional[float] = None) -> np.ndarray:
+    """The η candidate grid an ``eta_search`` mode sweeps.
+
+    Shared by :func:`optimize` and the hierarchical per-cell optimiser
+    (``repro.net.allocation``) so both sweep byte-identical grids: 'grid' is
+    the paper-faithful 0.01 step, 'coarse' a 0.05 step (refined locally by
+    the caller), 'warm' a ±5·eta_step window around ``eta0``.
+    """
+    if eta_search == "warm":
+        if eta0 is None:
+            raise ValueError("eta_search='warm' requires eta0= "
+                             "(the anchor of the local window)")
+        step = cfg.eta_step
+        lo = max(step, eta0 - 5.0 * step)
+        hi = min(1.0 - step, eta0 + 5.0 * step)
+        return np.arange(lo, hi + step / 2.0, step)
+    if eta_search == "coarse":
+        return np.arange(0.05, 1.0, 0.05)
+    return np.arange(cfg.eta_step, 1.0, cfg.eta_step)
+
+
+def eta_refine_grid(cfg: FedsLLMConfig, eta: float) -> np.ndarray:
+    """The local ``eta_step``-step window the 'coarse' mode refines around
+    its sweep argmin — shared by :func:`optimize` and the per-cell optimiser
+    so both refine byte-identical grids."""
+    step = cfg.eta_step
+    lo = max(step, eta - 0.05)
+    hi = min(1.0 - step, eta + 0.05)
+    return np.arange(lo, hi + step / 2.0, step)
+
+
 def optimize(cfg: FedsLLMConfig, net: dm.Network, strategy: str = "proposed",
              model_params=None, eta_grid: Optional[np.ndarray] = None,
              solver: str = "exact", eta_search: str = "grid",
@@ -259,18 +291,7 @@ def optimize(cfg: FedsLLMConfig, net: dm.Network, strategy: str = "proposed",
     from the *previous round's* solve, stays a pure function of the round,
     which checkpoint resume requires)."""
     if eta_grid is None:
-        if eta_search == "warm":
-            if eta0 is None:
-                raise ValueError("eta_search='warm' requires eta0= "
-                                 "(the anchor of the local window)")
-            step = cfg.eta_step
-            lo = max(step, eta0 - 5.0 * step)
-            hi = min(1.0 - step, eta0 + 5.0 * step)
-            eta_grid = np.arange(lo, hi + step / 2.0, step)
-        elif eta_search == "coarse":
-            eta_grid = np.arange(0.05, 1.0, 0.05)
-        else:
-            eta_grid = np.arange(cfg.eta_step, 1.0, cfg.eta_step)
+        eta_grid = eta_grid_for(cfg, eta_search, eta0)
     fixed_eta = 0.1  # paper: FE/BA fix η = 0.1
 
     if strategy == "BA":
@@ -304,10 +325,7 @@ def optimize(cfg: FedsLLMConfig, net: dm.Network, strategy: str = "proposed",
             if a.feasible and (best is None or a.T < best.T):
                 best = a
         if eta_search == "coarse" and best is not None:
-            step = cfg.eta_step
-            lo = max(step, best.eta - 0.05)
-            hi = min(1.0 - step, best.eta + 0.05)
-            for eta in np.arange(lo, hi + step / 2, step):
+            for eta in eta_refine_grid(cfg, best.eta):
                 eta = float(eta)
                 val, _ = _feasibility(best.T, cfg, net, eta, cfg.split_ratio_min,
                                       model_params)

@@ -93,7 +93,8 @@ def train_fedsllm(args):
     exp = Experiment.from_config(run_cfg, eta=args.eta, lora_rank=args.lora_rank,
                                  aggregator=args.aggregator,
                                  allocator=args.allocator, compressor=args.codec,
-                                 scenario=args.scenario)
+                                 scenario=args.scenario,
+                                 topology=args.topology)
     print(exp.describe())
 
     stream = TokenStream(args.batch, args.seq, cfg.vocab_size, seed=0)
@@ -160,7 +161,11 @@ def main():
     ap.add_argument("--scenario", default="blockfade",
                     help="channel-dynamics scenario (repro.sim.scenario): "
                          "frozen | blockfade | geo-blockfade | drift | "
-                         "hetero | outage")
+                         "hetero | outage | shadowing")
+    ap.add_argument("--topology", default="star",
+                    help="network graph (repro.net.topology): star | "
+                         "edge-cloud | edge-agg | relay; non-star needs a "
+                         "geometry scenario, e.g. --scenario geo-blockfade")
     args = ap.parse_args()
     if args.fedsllm:
         train_fedsllm(args)

@@ -1,0 +1,18 @@
+"""Hierarchical network topologies (multi-hop client→edge→cloud graphs).
+
+``topology`` defines the :class:`Topology` protocol and the name registry —
+``star`` (the flat FedsLLM default) | ``edge-cloud`` | ``edge-agg`` |
+``relay`` — the 5th pluggable strategy axis of ``repro.api.Experiment``;
+``delay`` composes per-hop times into an end-to-end critical-path
+``RoundTiming``; ``allocation`` solves the paper's (16)/(17) per edge cell
+(independent convex subproblems at fixed η, topology-level η sweep).
+"""
+
+# allocation/delay first: topology imports them from this package, so they
+# must already be bound when a caller lands on repro.net.topology directly
+from repro.net import allocation, delay
+from repro.net.delay import HierRoundTiming
+from repro.net.topology import (Topology, get_topology, topologies)
+
+__all__ = ["Topology", "get_topology", "topologies", "HierRoundTiming",
+           "allocation", "delay"]

@@ -1,0 +1,53 @@
+"""Per-hop delay composition for hierarchical topologies.
+
+Extends :class:`repro.core.fedsllm.RoundTiming` — the §III per-client round
+time (compute + fed uplink + per-iteration main uplink) — with the backhaul
+hop a multi-hop graph adds: each client's end-to-end round time is the
+critical path through its own route,
+
+    total_k = compute_k + t_c,k + V·t_s,k + backhaul_{edge(k)}
+
+and the round's wall-clock stays the max over clients of that per-path
+total, so deadline straggler masks and the campaign's simulated clock work
+unchanged on the richer timing object.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.fedsllm import RoundTiming
+
+
+@dataclass
+class HierRoundTiming(RoundTiming):
+    """RoundTiming plus the backhaul hop of each client's path.
+
+    ``total`` already includes ``backhaul`` (critical-path composed); the
+    extra fields keep the per-hop breakdown inspectable for reporting.
+    """
+
+    backhaul: np.ndarray = None  # (K,) backhaul seconds on each client's path
+    edge_of: Optional[np.ndarray] = None  # (K,) edge index per client
+
+
+def compose(wireless: RoundTiming, backhaul_k: np.ndarray,
+            assign: Optional[np.ndarray]) -> HierRoundTiming:
+    """Compose the wireless hop with a per-client backhaul hop.
+
+    ``backhaul_k`` is already expanded to (K,) — each client carries the
+    backhaul time of the edge it is attached to (all of a cell's traffic
+    shares the pipe, so every member waits for the full cell transfer).
+    """
+    backhaul_k = np.asarray(backhaul_k, float)
+    return HierRoundTiming(
+        compute=wireless.compute,
+        uplink_fed=wireless.uplink_fed,
+        uplink_main=wireless.uplink_main,
+        total=wireless.total + backhaul_k,
+        backhaul=backhaul_k,
+        edge_of=None if assign is None else np.asarray(assign),
+    )

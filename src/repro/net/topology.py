@@ -1,0 +1,315 @@
+"""Hierarchical network topologies — the 5th pluggable strategy axis.
+
+The paper's §IV system model is a *star*: every client has a direct wireless
+link to one main server and one federated server sharing a single bandwidth
+pool.  Follow-on deployments (SplitLLM's hierarchical split over wireless,
+arXiv 2501.13318; edge-assisted SFL, arXiv 2504.14667) are *multi-hop*:
+clients reach an edge server over wireless, edges reach the cloud over
+backhaul, and aggregation can happen at both tiers.  This module makes that
+graph a first-class :class:`Topology`, registered by name like the other
+four axes (aggregators / allocators / compressors / scenarios):
+
+  ``star``        the legacy flat FedsLLM graph (the default, bit-identical
+                  to the pre-topology engine — no attachment, no backhaul)
+  ``edge-cloud``  K clients → M edge servers → 1 cloud: the edge hosts the
+                  server subnetwork (split-learning peer), the cloud hosts
+                  the federated aggregator; every client's per-round fed
+                  traffic transits its edge's backhaul link
+  ``edge-agg``    like ``edge-cloud`` but the edge also pre-aggregates its
+                  clients' LoRA deltas before the backhaul hop (two-tier
+                  fedavg): the backhaul carries ONE delta per edge, and the
+                  in-trace aggregation runs per edge then across edges
+  ``relay``       clients sit behind relay nodes: the relay forwards ALL of
+                  its clients' traffic (fed upload + per-iteration smashed
+                  activations) over one shared uplink pipe
+
+A topology owns three things:
+
+  (a) *attachment* — which edge each client hangs off, by path loss against
+      deterministic edge positions (a ring inside the cell), recomputed from
+      each round's large-scale state so mobility (the ``drift`` scenario)
+      re-attaches clients as they move;
+  (b) *per-hop delay* — the wireless hop reuses the §III rate model against
+      the client's **attached edge** (each edge owns an independent copy of
+      the bandwidth pool — spatial reuse), the backhaul hop is a configured
+      capacity; both compose into an end-to-end ``RoundTiming`` via the
+      max-over-paths critical path (``repro.net.delay``);
+  (c) *allocation* — problems (16)/(17) solved **per edge cell**: at fixed η
+      each cell's bandwidth pool is an independent convex subproblem for the
+      existing Lemma-3 machinery; a topology-level η sweep combines the
+      cells under the hierarchical critical path (``repro.net.allocation``).
+
+Everything here is host-side numpy (the simulator).  The only thing that
+crosses into the jitted round function is the static-shaped one-hot
+assignment matrix of the ``edge-agg`` two-tier aggregation — like the
+straggler mask, it varies per round in value only, so the single-jit-trace
+round contract holds.
+
+    exp = Experiment.from_config(run_cfg, topology="edge-cloud",
+                                 scenario="geo-blockfade")
+    exp.run(num_rounds=20, stream=stream, reallocate=True)
+
+Non-star topologies need a geometry-carrying scenario (``geo-blockfade``,
+``drift``, ``hetero``, ``outage``, ``shadowing`` — anything built on
+``realize_network``): the legacy ``blockfade``/``frozen`` draws don't record
+user positions, so there is nothing to attach to (a ``ValueError`` says so).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.config import FedsLLMConfig
+from repro.core import delay_model as dm
+from repro.core import fedsllm
+from repro.core.fedsllm import RoundTiming
+from repro.core.resource_alloc import Allocation
+from repro.net import allocation as hier_alloc
+from repro.net import delay as hier_delay
+from repro.registry import Registry
+
+topologies: Registry = Registry("topology")
+
+
+class Topology:
+    """Base class: the flat (star) graph; subclasses add tiers.
+
+    All methods must be pure in their arguments — campaigns re-derive the
+    attachment every round from that round's network, so determinism in
+    ``(seed, round)`` is inherited from the scenario that drew the network.
+    """
+
+    name = "topology"
+    #: number of intermediate nodes (edges / relays); 0 = flat
+    num_edges = 0
+    #: whether the in-trace aggregation is two-tier (per-edge then cloud)
+    two_tier = False
+
+    # -- identity ----------------------------------------------------------
+    def params(self) -> dict:
+        """Constructor parameters that change the graph (digest input)."""
+        return {}
+
+    def digest(self, fcfg: FedsLLMConfig, scenario, seed: int) -> str:
+        """Checkpoint identity: graph params + constructor-time attachment.
+
+        Two campaigns that share a scenario draw but hang clients off
+        different graphs (edge count, backhaul capacity, or a different
+        attachment realisation) are different campaigns — resume must be
+        able to tell them apart.
+        """
+        h = hashlib.sha1(repr(sorted(self.params().items())).encode())
+        if self.num_edges:
+            net = scenario.initial_network(fcfg, seed)
+            assign = self.attach(fcfg, net)
+            h.update(np.ascontiguousarray(assign, np.int64).tobytes())
+        return h.hexdigest()[:16]
+
+    # -- attachment --------------------------------------------------------
+    def edge_xy(self, fcfg: FedsLLMConfig) -> Optional[np.ndarray]:
+        """(M, 2) deterministic edge positions; None for the flat graph."""
+        return None
+
+    def attach(self, fcfg: FedsLLMConfig,
+               net: dm.Network) -> Optional[np.ndarray]:
+        """(K,) edge index per client (minimum path loss); None when flat."""
+        return None
+
+    def localize(self, fcfg: FedsLLMConfig, net: dm.Network
+                 ) -> tuple[dm.Network, Optional[np.ndarray]]:
+        """Re-anchor the wireless hop on the attached edge.
+
+        Returns ``(net', assign)``: for the flat graph this is the identity;
+        hierarchical graphs move each client's path loss from the BS to its
+        nearest edge (the shadowing realisation is preserved — only the
+        deterministic distance term changes), so every downstream consumer
+        (allocator, retiming, deadline masks) prices the client→edge link.
+        """
+        return net, None
+
+    # -- allocation + timing ----------------------------------------------
+    def allocate(self, fcfg: FedsLLMConfig, net: dm.Network,
+                 assign: Optional[np.ndarray], allocate_fn, *,
+                 strategy: str = "proposed", **kw) -> Allocation:
+        """Solve (16)/(17) on this graph; flat = the legacy single-pool solve."""
+        return allocate_fn(fcfg, net, **kw)
+
+    def round_timing(self, fcfg: FedsLLMConfig, net: dm.Network,
+                     alloc: Allocation, eta: float,
+                     assign: Optional[np.ndarray]) -> RoundTiming:
+        """End-to-end per-client round time (max over the client's path)."""
+        return fedsllm.simulate_round_time(fcfg, net, alloc, eta)
+
+    def backhaul_seconds(self, fcfg: FedsLLMConfig,
+                         assign: Optional[np.ndarray],
+                         eta: float) -> np.ndarray:
+        """(K,) per-client backhaul hop time this round; zeros when flat
+        (``assign=None`` — the star graph has no second hop)."""
+        return np.zeros(0 if assign is None else len(assign))
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        return f"{type(self).__name__}({self.name!r})"
+
+
+@topologies.register("star")
+class StarTopology(Topology):
+    """The legacy flat FedsLLM graph — every client one wireless hop from
+    both servers, one shared bandwidth pool.  Bit-identical to the
+    pre-topology engine (every method is the identity / legacy call)."""
+
+    name = "star"
+
+
+class HierTopology(Topology):
+    """Shared machinery for multi-hop graphs: edge ring, attachment,
+    localization and the per-cell allocator; subclasses define what the
+    backhaul hop carries."""
+
+    def __init__(self, num_edges: int = 2, backhaul_bps: float = 200e6):
+        if num_edges < 1:
+            raise ValueError(f"num_edges must be ≥ 1, got {num_edges}")
+        if backhaul_bps <= 0:
+            raise ValueError(f"backhaul_bps must be > 0, got {backhaul_bps}")
+        self.num_edges = int(num_edges)
+        self.backhaul_bps = float(backhaul_bps)
+
+    def params(self) -> dict:
+        return {"num_edges": self.num_edges, "backhaul_bps": self.backhaul_bps}
+
+    def edge_xy(self, fcfg: FedsLLMConfig) -> np.ndarray:
+        """Edges evenly spaced on a ring of radius ``area_m/4`` — a
+        deterministic function of (M, area) so no RNG stream is consumed
+        (the scenario owns every random draw)."""
+        ang = 2.0 * np.pi * np.arange(self.num_edges) / self.num_edges
+        r = fcfg.area_m / 4.0
+        return np.stack([r * np.cos(ang), r * np.sin(ang)], axis=1)
+
+    def attach(self, fcfg: FedsLLMConfig, net: dm.Network) -> np.ndarray:
+        if net.xy is None:
+            raise ValueError(
+                f"topology {self.name!r} needs a geometry-carrying scenario "
+                f"(Network.xy is None — the legacy 'blockfade'/'frozen' "
+                f"draws don't record positions); use geo-blockfade, drift, "
+                f"hetero, outage or shadowing")
+        # nearest edge == minimum distance path loss (monotone in distance)
+        d = np.linalg.norm(net.xy[:, None, :] - self.edge_xy(fcfg)[None, :, :],
+                           axis=2)
+        return np.argmin(d, axis=1)
+
+    def localize(self, fcfg: FedsLLMConfig, net: dm.Network
+                 ) -> tuple[dm.Network, np.ndarray]:
+        assign = self.attach(fcfg, net)
+        exy = self.edge_xy(fcfg)[assign]
+        # the SAME path-loss law that produced net.pl_db, on the relative
+        # client→edge positions — keep the round's shadowing realisation
+        # and swap only the distance term: g' = g · 10^((pl_bs − pl_edge)/10)
+        pl_edge = dm.path_loss_db(fcfg, net.xy - exy)
+        ratio = dm.db_to_lin(net.pl_db - pl_edge)
+        return dataclasses.replace(net, g_c=net.g_c * ratio,
+                                   g_s=net.g_s * ratio,
+                                   pl_db=pl_edge), assign
+
+    def allocate(self, fcfg: FedsLLMConfig, net: dm.Network,
+                 assign: Optional[np.ndarray], allocate_fn, *,
+                 strategy: str = "proposed", **kw) -> Allocation:
+        return hier_alloc.optimize_cells(fcfg, net, assign, self,
+                                         allocate_fn, strategy=strategy, **kw)
+
+    def round_timing(self, fcfg: FedsLLMConfig, net: dm.Network,
+                     alloc: Allocation, eta: float,
+                     assign: Optional[np.ndarray]) -> RoundTiming:
+        wireless = fedsllm.simulate_round_time(fcfg, net, alloc, eta)
+        return hier_delay.compose(wireless,
+                                  self.backhaul_seconds(fcfg, assign, eta),
+                                  assign)
+
+    # -- per-edge traffic on the backhaul hop ------------------------------
+    def _cell_bits(self, fcfg: FedsLLMConfig, assign: np.ndarray,
+                   eta: float) -> np.ndarray:
+        """(M,) bits each edge pushes over its backhaul per global round.
+
+        Priced for the FULL attached population, matching the §III delay
+        model's convention: every one of the K simulated clients trains each
+        global round (the wireless bandwidth split is likewise solved for
+        all K), and campaign cohorts subsample *that* priced round rather
+        than re-pricing the network per cohort.
+        """
+        raise NotImplementedError
+
+    def backhaul_seconds(self, fcfg: FedsLLMConfig,
+                         assign: np.ndarray, eta: float) -> np.ndarray:
+        bits = self._cell_bits(fcfg, assign, eta)
+        return (bits / self.backhaul_bps)[assign]
+
+
+@topologies.register("edge-cloud")
+class EdgeCloudTopology(HierTopology):
+    """K clients → M edges → 1 cloud (SplitLLM-style).
+
+    The edge hosts the server subnetwork: the per-iteration smashed
+    activations (``s`` bits) terminate at the edge.  The cloud hosts the
+    federated aggregator: each client's per-round LoRA delta (``s_c`` bits)
+    transits the edge's backhaul, serialised with its cellmates'."""
+
+    name = "edge-cloud"
+
+    def _cell_bits(self, fcfg, assign, eta):
+        counts = np.bincount(assign, minlength=self.num_edges)
+        return counts * fcfg.s_c_bits
+
+
+@topologies.register("edge-agg")
+class EdgeAggTopology(HierTopology):
+    """``edge-cloud`` plus edge-side pre-aggregation (two-tier fedavg).
+
+    The edge averages its clients' LoRA deltas before the backhaul hop, so
+    the backhaul carries ONE ``s_c`` payload per edge regardless of cell
+    size, and the in-trace aggregation becomes per-edge → cross-edge
+    (``federated.hier_aggregate``; the cohort's one-hot assignment matrix is
+    a value-only round-function argument, like the straggler mask)."""
+
+    name = "edge-agg"
+    two_tier = True
+
+    def _cell_bits(self, fcfg, assign, eta):
+        return np.full(self.num_edges, fcfg.s_c_bits)
+
+
+@topologies.register("relay")
+class RelayTopology(HierTopology):
+    """Clients behind relay nodes sharing one uplink pipe each.
+
+    The relay is a pure forwarder: everything a client sends — the
+    per-round fed delta AND every local iteration's smashed activations —
+    transits the relay's uplink, serialised with its cellmates'.  The
+    backhaul load therefore scales with Lemma 2's V(η) local-iteration
+    count, which couples the relay hop into the η sweep."""
+
+    name = "relay"
+
+    def __init__(self, num_edges: int = 2, backhaul_bps: float = 50e6):
+        super().__init__(num_edges=num_edges, backhaul_bps=backhaul_bps)
+
+    def _cell_bits(self, fcfg, assign, eta):
+        counts = np.bincount(assign, minlength=self.num_edges)
+        V = dm.local_iters(fcfg, eta)
+        return counts * (fcfg.s_c_bits + V * fcfg.s_bits)
+
+
+def get_topology(spec: Union[str, Topology]) -> Topology:
+    """Resolve a topology name or pass an instance through.
+
+    ``get_topology("edge-cloud")`` → the registered default instance;
+    ``get_topology(EdgeCloudTopology(num_edges=4))`` → the object itself.
+    Unknown names raise ``KeyError`` listing the registered names.
+    """
+    if isinstance(spec, Topology):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Topology):
+        return spec()
+    cls = topologies.get(spec)
+    return cls()

@@ -3,12 +3,13 @@
 ``campaign`` drives an ``Experiment`` through many global rounds (the engine
 behind ``Experiment.run``); ``scenario`` defines the channel dynamics as
 first-class, name-registered objects — ``frozen`` | ``blockfade`` |
-``geo-blockfade`` | ``drift`` | ``hetero`` | ``outage`` — splitting the
-once-per-campaign large-scale state from per-round fading; ``events``
-generates the remaining per-round events (elastic cohorts, deadline
-straggler masks, stale-allocation retiming) deterministically keyed by
-``(campaign_seed, round)``; ``sweep`` fans a grid of scenarios × allocators
-into one tidy records table (``Experiment.sweep``).
+``geo-blockfade`` | ``drift`` | ``hetero`` | ``outage`` | ``shadowing`` —
+splitting the once-per-campaign large-scale state from per-round fading;
+``events`` generates the remaining per-round events (elastic cohorts,
+deadline straggler masks, stale-allocation retiming, topology-localized
+round draws) deterministically keyed by ``(campaign_seed, round)``;
+``sweep`` fans a grid of topologies × scenarios × allocators into one tidy
+records table (``Experiment.sweep``).
 """
 
 from repro.sim import events

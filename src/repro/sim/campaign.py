@@ -80,6 +80,7 @@ class CampaignResult:
     # requested rounds — records is then empty)
     stopped_by: str
     scenario: str = "blockfade"  # channel-dynamics family the rounds ran under
+    topology: str = "star"  # network graph the rounds ran over
 
     @property
     def num_rounds(self) -> int:
@@ -118,7 +119,7 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                  batches_fn: Optional[Callable[[int, np.ndarray], Any]] = None,
                  cohort: Optional[int] = None,
                  resample_channel: bool = True, reallocate: bool = False,
-                 realloc_search: Optional[str] = None,
+                 realloc_search: Optional[str] = "warm",
                  deadline: Optional[float] = None,
                  stop_at_lemma1: bool = False,
                  checkpoint_dir: Optional[str] = None,
@@ -142,13 +143,15 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
           scenario's call.  With ``reallocate=False`` the stale allocation is
           re-priced under the new gains (:func:`events.retime_allocation`);
           with ``reallocate=True`` the experiment's allocator strategy
-          re-solves problems (16)/(17) *jointly* every round: the solved η*
-          is adopted (quantized to the ``fcfg.eta_bucket`` grid via
-          ``Experiment.set_eta``), so bandwidth, split AND the Lemma 1/2
-          schedule all track the channel.  ``realloc_search`` overrides the
-          per-round η-sweep mode (e.g. ``"warm"`` sweeps a local window
-          around the constructor's η — ~10× cheaper; default: the
-          experiment's ``eta_search``).
+          re-solves problems (16)/(17) *jointly* every round — per edge cell
+          under a hierarchical topology: the solved η* is adopted (quantized
+          to the ``fcfg.eta_bucket`` grid via ``Experiment.set_eta``), so
+          bandwidth, split AND the Lemma 1/2 schedule all track the channel.
+          ``realloc_search`` sets the per-round η-sweep mode; the default
+          ``"warm"`` sweeps a ±5-step window around the constructor's solved
+          η* — ~10× cheaper and, per the cross-scenario audit in
+          ``tests/test_scenario.py``, optimal to <1e-6 of the full sweep
+          (pass ``None`` to fall back to the experiment's ``eta_search``).
       ``cohort``    clients trained per round (< K ⇒ elastic subsampling via
           ``federated.client_sample``); default: the full population.
       ``deadline``  simulated seconds; cohort members whose round delay
@@ -165,8 +168,8 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
           ``resume=True`` restores the newest checkpoint and replays the
           remaining rounds bit-identically (everything is round-indexed).
           Non-campaign checkpoints, and checkpoints from a different
-          campaign — seed, η, allocator, scenario name or large-scale-state
-          digest mismatch — are refused.
+          campaign — seed, η, allocator, scenario name, large-scale-state
+          digest, topology name or attachment digest mismatch — are refused.
     """
     fcfg = exp.fcfg
     K = fcfg.num_clients
@@ -223,6 +226,9 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                         ("allocator", exp.allocator_name),
                         ("scenario", scenario.name),
                         ("ls_digest", scenario.digest(fcfg, campaign_seed)),
+                        ("topology", exp.topology.name),
+                        ("topo_digest", exp.topology.digest(fcfg, scenario,
+                                                            campaign_seed)),
                         ("reallocate", reallocate)]
             if not (reallocate and meta.get("reallocate")):
                 # under joint reallocation η is derived per-round state, not
@@ -248,20 +254,25 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
     base_alloc = exp.alloc  # the last *solved* allocation (retiming input)
     records: list[RoundRecord] = []
     for r in range(start, target):
-        # (a) per-round scenario: channel evolution + allocation + timing
+        # (a) per-round scenario: channel evolution + re-attachment +
+        # allocation + timing
         if resample_channel:
-            exp.net = events.round_network(fcfg, campaign_seed, r,
-                                           scenario=scenario)
+            exp.net, exp.assign = events.localized_round_network(
+                fcfg, campaign_seed, r, scenario=scenario,
+                topology=exp.topology)
             if reallocate:
                 # joint re-solve of problems (16)/(17) on this round's
-                # realisation; the solved η* is adopted (quantized onto the
+                # realisation (per edge cell under a hierarchical
+                # topology); the solved η* is adopted (quantized onto the
                 # η-bucket grid) so the Lemma 1/2 schedule tracks the
                 # channel without recompiling the round function per round
                 search = exp._eta_search if realloc_search is None else realloc_search
                 kw = {"eta_search": search}
                 if search == "warm":
                     kw["eta0"] = exp._eta0
-                base_alloc = exp._allocate(fcfg, exp.net, **kw)
+                base_alloc = exp.topology.allocate(
+                    fcfg, exp.net, exp.assign, exp._allocate,
+                    strategy=exp.allocator_name, **kw)
                 exp.alloc = base_alloc
                 exp.set_eta(base_alloc.eta)
             else:
@@ -299,7 +310,8 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
     exp.campaign_time = cumulative
     return CampaignResult(records=records, state=exp.state,
                           total_time=cumulative, rounds_lemma1=rounds_lemma1,
-                          stopped_by=stopped_by, scenario=scenario.name)
+                          stopped_by=stopped_by, scenario=scenario.name,
+                          topology=exp.topology.name)
 
 
 def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
@@ -310,4 +322,7 @@ def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
                "allocator": exp.allocator_name,
                "scenario": exp.scenario.name,
                "ls_digest": exp.scenario.digest(exp.fcfg, campaign_seed),
+               "topology": exp.topology.name,
+               "topo_digest": exp.topology.digest(exp.fcfg, exp.scenario,
+                                                  campaign_seed),
                "reallocate": reallocate})

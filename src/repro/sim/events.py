@@ -61,6 +61,22 @@ def round_network(fcfg: FedsLLMConfig, campaign_seed: int,
     return dm.sample_network(fcfg, seed=round_seed(campaign_seed, round_idx))
 
 
+def localized_round_network(fcfg: FedsLLMConfig, campaign_seed: int,
+                            round_idx: int, scenario=None, topology=None):
+    """Round draw + topology localization: ``(net, assign)``.
+
+    The scenario draws the round's §IV realisation (vs the BS at the
+    origin); the topology then re-anchors each client's wireless hop on its
+    attached edge — attachment is recomputed from THIS round's large-scale
+    state, so mobility scenarios (``drift``) re-attach clients as they move.
+    Without a topology (or under ``star``) this is the plain round draw.
+    """
+    net = round_network(fcfg, campaign_seed, round_idx, scenario=scenario)
+    if topology is None:
+        return net, None
+    return topology.localize(fcfg, net)
+
+
 def _transmit_time(bits: float, rate: np.ndarray) -> np.ndarray:
     """bits/rate with rate→0 treated as an outage (+inf, a sure straggler)."""
     rate = np.asarray(rate, float)

@@ -20,6 +20,9 @@ aggregator/allocator/compressor axes of ``repro.api``:
                      classes over fixed geometry + per-round fading
   ``outage``         bursty deep fades: per-user extra loss that switches
                      on/off in multi-round bursts over geo-blockfade
+  ``shadowing``      Gauss-Markov temporally-correlated shadowing: AR(1)
+                     in dB across rounds (lag-1 autocorrelation ρ) with
+                     the paper's N(0, σ²) per-round marginal preserved
 
 Every scenario is a *pure function* of ``(fcfg, seed, round)`` — no hidden
 state between calls — so campaigns stay bit-reproducible and checkpoint
@@ -49,10 +52,12 @@ from repro.registry import Registry
 from repro.sim import events
 
 # Stream tags decorrelating the scenario's auxiliary draws (mobility steps,
-# tier assignment, outage bursts) from the fading stream of the same seed.
+# tier assignment, outage bursts, shadowing innovations) from the fading
+# stream of the same seed.
 DRIFT_STREAM_TAG = 0xD21F7
 HETERO_STREAM_TAG = 0x4E7E20
 OUTAGE_STREAM_TAG = 0x0074A6E
+SHADOW_STREAM_TAG = 0x5AD011
 
 scenarios: Registry = Registry("scenario")
 
@@ -268,6 +273,52 @@ class OutageScenario(Scenario):
             fcfg, self.round_large_scale(fcfg, campaign_seed, round_idx),
             seed=events.round_seed(campaign_seed, round_idx),
             extra_loss_db=self.extra_loss_db(fcfg, campaign_seed, round_idx))
+
+
+@scenarios.register("shadowing")
+class ShadowingScenario(Scenario):
+    """Gauss-Markov temporally-correlated shadowing (AR(1) in dB).
+
+    The i.i.d. per-round shadow draws of ``geo-blockfade`` ignore that a
+    user standing behind the same building fades the same way for many
+    rounds.  Here each link's log-normal shadowing follows the classic
+    Gudmundson/Gauss-Markov process across rounds r,
+
+        S_0 = σ·ε_0,   S_r = ρ·S_{r-1} + σ·sqrt(1-ρ²)·ε_r,   ε ~ N(0, 1)
+
+    which keeps the stationary per-round marginal N(0, σ²) of the paper's
+    §IV model (σ = ``shadow_std_db``) while adding lag-1 autocorrelation ρ.
+    The whole innovation stream is keyed by the campaign seed alone and the
+    recursion is re-run from round 0 on every call, so round r's field is a
+    pure function of ``(seed, r)`` — checkpoint resume replays the process
+    exactly (same idiom as the ``drift`` walk).
+    """
+
+    name = "shadowing"
+
+    def __init__(self, rho: float = 0.8):
+        if not 0.0 <= rho < 1.0:
+            raise ValueError(f"shadowing rho must be in [0, 1), got {rho}")
+        self.rho = float(rho)
+
+    def params(self):
+        return {"rho": self.rho}
+
+    def shadow_db(self, fcfg: FedsLLMConfig, campaign_seed: int,
+                  round_idx: int) -> np.ndarray:
+        """(2, K) correlated shadow field at ``round_idx`` (fed, main)."""
+        rng = np.random.default_rng([campaign_seed, SHADOW_STREAM_TAG])
+        eps = rng.normal(size=(round_idx + 1, 2, fcfg.num_clients))
+        # closed-form AR(1): S_r = σ(ρ^r ε_0 + sqrt(1-ρ²) Σ_{i≥1} ρ^{r-i} ε_i)
+        coef = self.rho ** np.arange(round_idx, -1, -1.0)
+        coef[1:] *= np.sqrt(1.0 - self.rho**2)
+        return fcfg.shadow_std_db * np.tensordot(coef, eps, axes=(0, 0))
+
+    def round_network(self, fcfg, campaign_seed, round_idx):
+        return dm.realize_network(
+            fcfg, self.round_large_scale(fcfg, campaign_seed, round_idx),
+            seed=events.round_seed(campaign_seed, round_idx),
+            shadow_db=self.shadow_db(fcfg, campaign_seed, round_idx))
 
 
 # the registry stores classes (decorator-friendly); lookups hand out default

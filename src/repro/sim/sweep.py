@@ -1,24 +1,26 @@
-"""Scenario × allocator sweep runner.
+"""Topology × scenario × allocator sweep runner.
 
-One call fans a grid of channel-dynamics scenarios × resource-allocation
-strategies into identical campaigns over the same ``RunConfig``, collecting
-every round of every cell into one tidy long-format records table — the
-shape the paper's Fig. 2 comparison wants: the proposed allocator's delay
-reduction vs the BA baseline, now reproducible across every scenario family
-(mobility, device tiers, outages, …) instead of one frozen draw.
+One call fans a grid of network topologies × channel-dynamics scenarios ×
+resource-allocation strategies into identical campaigns over the same
+``RunConfig``, collecting every round of every cell into one tidy
+long-format records table — the shape the paper's Fig. 2 comparison wants:
+the proposed allocator's delay reduction vs the BA baseline, reproducible
+across every scenario family (mobility, device tiers, outages, …) and now
+per network graph (flat star vs hierarchical edge-cloud, …).
 
     res = run_sweep(run_cfg, num_rounds=10, stream=stream,
-                    scenarios=("blockfade", "geo-blockfade", "drift"),
+                    topologies=("star", "edge-cloud"),
+                    scenarios=("geo-blockfade", "drift"),
                     allocators=("proposed", "BA"))
-    res.summary()                 # one row per (scenario, allocator) cell
-    res.delay_reduction()         # {scenario: % delay saved proposed vs BA}
+    res.summary()          # one row per (topology, scenario, allocator) cell
+    res.delay_reduction()  # % delay saved vs BA, per topology × scenario
     res.to_json("results/SWEEP.json")
 
-Also a CLI (the CI sweep smoke):
+Also a CLI (the CI sweep smokes):
 
     PYTHONPATH=src python -m repro.sim.sweep --smoke \
-        --scenarios blockfade geo-blockfade --allocators EB BA \
-        --rounds 2 --out results/SWEEP_smoke.json
+        --topologies star edge-cloud --scenarios geo-blockfade drift \
+        --allocators proposed BA --rounds 2 --out results/SWEEP_hier.json
 """
 
 from __future__ import annotations
@@ -32,54 +34,74 @@ import numpy as np
 
 DEFAULT_SCENARIOS = ("blockfade", "geo-blockfade")
 DEFAULT_ALLOCATORS = ("proposed", "BA")
+DEFAULT_TOPOLOGIES = ("star",)
 
 
 @dataclass
 class SweepResult:
     """A finished sweep: long-format per-round records + grid metadata."""
 
-    records: list[dict]  # one dict per (scenario, allocator, round)
+    records: list[dict]  # one dict per (topology, scenario, allocator, round)
     scenarios: tuple[str, ...]
     allocators: tuple[str, ...]
     num_rounds: int
     meta: dict = field(default_factory=dict)  # cell-level info (traces, η*…)
+    topologies: tuple[str, ...] = DEFAULT_TOPOLOGIES
 
-    def cell(self, scenario: str, allocator: str) -> list[dict]:
-        """The per-round records of one grid cell, in round order."""
+    def cell(self, scenario: str, allocator: str,
+             topology: Optional[str] = None) -> list[dict]:
+        """The per-round records of one grid cell, in round order.
+
+        ``topology`` may be omitted only on a single-topology grid (the
+        pre-topology call signature); on a multi-topology grid an explicit
+        name is required — silently merging graphs would hand callers
+        interleaved rounds from different campaigns."""
+        if topology is None:
+            if len(self.topologies) > 1:
+                raise ValueError(
+                    f"this sweep spans topologies {self.topologies}; "
+                    f"pass cell(scenario, allocator, topology=...)")
+            topology = self.topologies[0]
         return [r for r in self.records
-                if r["scenario"] == scenario and r["allocator"] == allocator]
+                if r["scenario"] == scenario and r["allocator"] == allocator
+                and r.get("topology", "star") == topology]
 
     def summary(self) -> list[dict]:
         """One row per cell: simulated campaign time, final loss, stragglers."""
         out = []
-        for s in self.scenarios:
-            for a in self.allocators:
-                rows = self.cell(s, a)
-                if not rows:
-                    continue
-                slots = sum(r["cohort_size"] for r in rows)
-                lost = sum(r["cohort_size"] - r["survivors"] for r in rows)
-                out.append({
-                    "scenario": s, "allocator": a, "rounds": len(rows),
-                    "total_time": rows[-1]["cumulative_time"],
-                    "final_loss": rows[-1]["loss_round_start"],
-                    "straggler_rate": lost / max(slots, 1),
-                    **self.meta.get((s, a), {}),
-                })
+        for t in self.topologies:
+            for s in self.scenarios:
+                for a in self.allocators:
+                    rows = self.cell(s, a, t)
+                    if not rows:
+                        continue
+                    slots = sum(r["cohort_size"] for r in rows)
+                    lost = sum(r["cohort_size"] - r["survivors"] for r in rows)
+                    out.append({
+                        "topology": t, "scenario": s, "allocator": a,
+                        "rounds": len(rows),
+                        "total_time": rows[-1]["cumulative_time"],
+                        "final_loss": rows[-1]["loss_round_start"],
+                        "straggler_rate": lost / max(slots, 1),
+                        **self.meta.get((t, s, a), {}),
+                    })
         return out
 
     def delay_reduction(self, allocator: str = "proposed",
                         baseline: str = "BA") -> dict[str, float]:
-        """Per-scenario % reduction in simulated campaign delay — the
-        paper's headline comparison (47.63% on the frozen draw), per
-        scenario family."""
+        """% reduction in simulated campaign delay — the paper's headline
+        comparison (47.63% on the frozen draw), per scenario family and,
+        when the grid spans several topologies, per network graph (keys
+        become ``"topology/scenario"``)."""
         out = {}
-        for s in self.scenarios:
-            a = self.cell(s, allocator)
-            b = self.cell(s, baseline)
-            if a and b and b[-1]["cumulative_time"] > 0:
-                out[s] = 100.0 * (1.0 - a[-1]["cumulative_time"]
-                                  / b[-1]["cumulative_time"])
+        for t in self.topologies:
+            for s in self.scenarios:
+                a = self.cell(s, allocator, t)
+                b = self.cell(s, baseline, t)
+                if a and b and b[-1]["cumulative_time"] > 0:
+                    key = s if len(self.topologies) == 1 else f"{t}/{s}"
+                    out[key] = 100.0 * (1.0 - a[-1]["cumulative_time"]
+                                        / b[-1]["cumulative_time"])
         return out
 
     def to_json(self, path: str) -> str:
@@ -93,6 +115,7 @@ class SweepResult:
                          "pct_by_scenario": self.delay_reduction(allocator,
                                                                  baseline)}
         payload = {
+            "topologies": list(self.topologies),
             "scenarios": list(self.scenarios),
             "allocators": list(self.allocators),
             "num_rounds": self.num_rounds,
@@ -110,10 +133,12 @@ class SweepResult:
 def run_sweep(run_cfg, num_rounds: int, *,
               scenarios: Sequence[str] = DEFAULT_SCENARIOS,
               allocators: Sequence[str] = DEFAULT_ALLOCATORS,
+              topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
               stream=None, batches=None, batches_fn=None,
               exp_overrides: Optional[dict] = None,
               **campaign_kw) -> SweepResult:
-    """Run the same campaign through every (scenario, allocator) cell.
+    """Run the same campaign through every (topology, scenario, allocator)
+    cell.
 
     Each cell builds a fresh ``Experiment`` from ``run_cfg`` (so cells are
     independent and individually deterministic — the whole sweep is a pure
@@ -122,6 +147,8 @@ def run_sweep(run_cfg, num_rounds: int, *,
     extra ``Experiment.from_config`` keywords to every cell (e.g.
     ``{"eta_search": "coarse", "cut": 1}``); ``campaign_kw`` forwards to
     ``Experiment.run`` (e.g. ``cohort=``, ``deadline=``, ``reallocate=``).
+    Non-star topologies need geometry-carrying scenarios in the grid (e.g.
+    ``geo-blockfade``/``drift`` — not the legacy ``blockfade``).
 
     Returns a :class:`SweepResult` whose ``records`` are tidy long-format
     rows — one per round per cell — ready for a dataframe or ``to_json``.
@@ -131,29 +158,31 @@ def run_sweep(run_cfg, num_rounds: int, *,
     exp_overrides = dict(exp_overrides or {})
     records: list[dict] = []
     meta: dict = {}
-    for s in scenarios:
-        for a in allocators:
-            exp = Experiment.from_config(run_cfg, scenario=s, allocator=a,
-                                         **exp_overrides)
-            res = exp.run(num_rounds=num_rounds, stream=stream,
-                          batches=batches, batches_fn=batches_fn,
-                          **campaign_kw)
-            for rec in res.records:
-                records.append({
-                    "scenario": s, "allocator": a, "round": rec.round,
-                    "eta": rec.eta, "alloc_T": float(rec.alloc.T),
-                    "cohort_size": rec.cohort_size,
-                    "survivors": rec.survivors,
-                    "round_time": rec.round_time,
-                    "cumulative_time": rec.cumulative_time,
-                    **rec.metrics,
-                })
-            meta[(s, a)] = {"trace_count": exp.trace_count,
-                            "eta_star": float(exp.alloc.eta),
-                            "eta_buckets": len(exp.eta_buckets)}
+    for t in topologies:
+        for s in scenarios:
+            for a in allocators:
+                exp = Experiment.from_config(run_cfg, scenario=s, allocator=a,
+                                             topology=t, **exp_overrides)
+                res = exp.run(num_rounds=num_rounds, stream=stream,
+                              batches=batches, batches_fn=batches_fn,
+                              **campaign_kw)
+                for rec in res.records:
+                    records.append({
+                        "topology": t, "scenario": s, "allocator": a,
+                        "round": rec.round,
+                        "eta": rec.eta, "alloc_T": float(rec.alloc.T),
+                        "cohort_size": rec.cohort_size,
+                        "survivors": rec.survivors,
+                        "round_time": rec.round_time,
+                        "cumulative_time": rec.cumulative_time,
+                        **rec.metrics,
+                    })
+                meta[(t, s, a)] = {"trace_count": exp.trace_count,
+                                   "eta_star": float(exp.alloc.eta),
+                                   "eta_buckets": len(exp.eta_buckets)}
     return SweepResult(records=records, scenarios=tuple(scenarios),
                        allocators=tuple(allocators), num_rounds=num_rounds,
-                       meta=meta)
+                       meta=meta, topologies=tuple(topologies))
 
 
 def main(argv: Optional[list[str]] = None) -> None:
@@ -169,6 +198,10 @@ def main(argv: Optional[list[str]] = None) -> None:
     ap.add_argument("--smoke", action="store_true", help="reduced config")
     ap.add_argument("--scenarios", nargs="+", default=list(DEFAULT_SCENARIOS))
     ap.add_argument("--allocators", nargs="+", default=list(DEFAULT_ALLOCATORS))
+    ap.add_argument("--topologies", nargs="+",
+                    default=list(DEFAULT_TOPOLOGIES),
+                    help="network graphs (repro.net.topology); non-star "
+                         "need geometry scenarios like geo-blockfade")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--cohort", type=int, default=4)
@@ -187,7 +220,8 @@ def main(argv: Optional[list[str]] = None) -> None:
     stream = TokenStream(2, 32 if args.smoke else 64, cfg.vocab_size, seed=0)
     overrides = {} if args.eta is None else {"eta": args.eta}
     res = run_sweep(run_cfg, args.rounds, scenarios=args.scenarios,
-                    allocators=args.allocators, stream=stream,
+                    allocators=args.allocators, topologies=args.topologies,
+                    stream=stream,
                     cohort=args.cohort, reallocate=args.reallocate,
                     exp_overrides=overrides)
     for row in res.summary():

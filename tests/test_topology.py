@@ -1,0 +1,454 @@
+"""Hierarchical topology subsystem: registry contract, attachment/
+localization invariants, per-hop delay composition, per-edge-cell
+allocation, two-tier aggregation inside the single-jit-trace contract,
+checkpoint topology guards, the star bit-compat golden, and the
+topology-dimension sweep."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment, get_topology, topologies
+from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                          get_arch, smoke_variant)
+from repro.core import delay_model as dm
+from repro.net.allocation import cell_latency, subnetwork
+from repro.net.topology import (EdgeAggTopology, EdgeCloudTopology,
+                                HierTopology, RelayTopology, Topology)
+from repro.sim import events
+from repro.sim.scenario import DriftScenario, get_scenario
+from repro.sim.sweep import run_sweep
+
+K = 6
+COHORT = 4
+
+
+@pytest.fixture(scope="module")
+def fcfg():
+    return FedsLLMConfig(num_clients=K)
+
+
+@pytest.fixture(scope="module")
+def run_cfg():
+    cfg = smoke_variant(get_arch("fedsllm-100m")).replace(
+        lora=LoRAConfig(rank=4, alpha=8.0))
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     fedsllm=FedsLLMConfig(num_clients=K))
+
+
+@pytest.fixture(scope="module")
+def stream(run_cfg):
+    from repro.data.tokens import TokenStream
+
+    return TokenStream(2, 32, run_cfg.model.vocab_size, seed=0)
+
+
+def _fresh(run_cfg, **kw):
+    kw.setdefault("allocator", "EB")
+    kw.setdefault("eta", 0.5)
+    return Experiment.from_config(run_cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract (the fifth axis mirrors the other four)
+# ---------------------------------------------------------------------------
+
+
+def test_topology_registry_contents():
+    assert {"star", "edge-cloud", "edge-agg", "relay"} <= set(topologies.names())
+
+
+def test_unknown_topology_lists_known_names():
+    with pytest.raises(KeyError) as exc:
+        get_topology("definitely-not-registered")
+    for name in topologies.names():
+        assert name in str(exc.value)
+
+
+def test_unknown_topology_in_experiment(run_cfg):
+    with pytest.raises(KeyError, match="unknown topology"):
+        Experiment.from_config(run_cfg, topology="nope")
+
+
+def test_get_topology_accepts_instances():
+    topo = EdgeCloudTopology(num_edges=4)
+    assert get_topology(topo) is topo
+    assert isinstance(get_topology("edge-cloud"), EdgeCloudTopology)
+
+
+def test_topology_parameter_validation():
+    with pytest.raises(ValueError, match="num_edges"):
+        EdgeCloudTopology(num_edges=0)
+    with pytest.raises(ValueError, match="backhaul_bps"):
+        RelayTopology(backhaul_bps=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Attachment + localization
+# ---------------------------------------------------------------------------
+
+
+def test_edge_positions_deterministic_ring(fcfg):
+    topo = EdgeCloudTopology(num_edges=3)
+    exy = topo.edge_xy(fcfg)
+    assert exy.shape == (3, 2)
+    np.testing.assert_allclose(np.linalg.norm(exy, axis=1), fcfg.area_m / 4.0)
+    np.testing.assert_array_equal(exy, topo.edge_xy(fcfg))
+
+
+def test_attach_picks_nearest_edge(fcfg):
+    topo = EdgeCloudTopology(num_edges=3)
+    net = get_scenario("geo-blockfade").round_network(fcfg, 0, 0)
+    assign = topo.attach(fcfg, net)
+    assert assign.shape == (K,)
+    d = np.linalg.norm(net.xy[:, None, :] - topo.edge_xy(fcfg)[None], axis=2)
+    np.testing.assert_array_equal(assign, np.argmin(d, axis=1))
+
+
+def test_localize_swaps_distance_term_keeps_shadowing(fcfg):
+    """g' = g·10^((pl_bs − pl_edge)/10): the round's shadowing realisation
+    survives localization, only the deterministic path loss moves."""
+    topo = EdgeCloudTopology(num_edges=2)
+    net = get_scenario("geo-blockfade").round_network(fcfg, 0, 1)
+    loc, assign = topo.localize(fcfg, net)
+    ratio = dm.db_to_lin(net.pl_db - loc.pl_db)
+    np.testing.assert_allclose(loc.g_c, net.g_c * ratio, rtol=1e-12)
+    np.testing.assert_allclose(loc.g_s, net.g_s * ratio, rtol=1e-12)
+    np.testing.assert_array_equal(loc.xy, net.xy)  # geometry untouched
+    # edge path loss is the path loss to the attached edge
+    exy = topo.edge_xy(fcfg)[assign]
+    d_km = np.maximum(np.linalg.norm(net.xy - exy, axis=1), 1.0) / 1000.0
+    np.testing.assert_allclose(
+        loc.pl_db, fcfg.pathloss_const_db + fcfg.pathloss_exp * np.log10(d_km))
+
+
+def test_hier_topology_refuses_geometry_free_scenarios(run_cfg):
+    """The legacy blockfade/frozen draws carry no positions — attaching to
+    an edge is meaningless and must fail loudly."""
+    for scenario in ("blockfade", "frozen"):
+        with pytest.raises(ValueError, match="geometry"):
+            Experiment.from_config(run_cfg, topology="edge-cloud",
+                                   scenario=scenario)
+
+
+def test_drift_reattaches_clients_as_they_move(fcfg):
+    """Under mobility the per-round attachment is recomputed from that
+    round's geometry — clients hop cells."""
+    topo = EdgeCloudTopology(num_edges=3)
+    sc = DriftScenario(step_m=150.0)
+    assigns = []
+    for r in range(6):
+        net, assign = events.localized_round_network(
+            fcfg, 0, r, scenario=sc, topology=topo)
+        assigns.append(assign)
+    assert any(not np.array_equal(assigns[0], a) for a in assigns[1:])
+
+
+def test_localized_round_network_without_topology(fcfg):
+    net, assign = events.localized_round_network(
+        fcfg, 0, 0, scenario=get_scenario("geo-blockfade"))
+    assert assign is None and net.xy is not None
+
+
+# ---------------------------------------------------------------------------
+# Per-hop delay composition
+# ---------------------------------------------------------------------------
+
+
+def test_edge_cloud_timing_adds_cell_backhaul(run_cfg):
+    exp = _fresh(run_cfg, topology="edge-cloud", scenario="geo-blockfade")
+    topo, assign = exp.topology, exp.assign
+    wireless = (exp.timing.total - exp.timing.backhaul)
+    counts = np.bincount(assign, minlength=topo.num_edges)
+    expect = (counts * exp.fcfg.s_c_bits / topo.backhaul_bps)[assign]
+    np.testing.assert_allclose(exp.timing.backhaul, expect, rtol=1e-12)
+    np.testing.assert_allclose(
+        wireless,
+        exp.timing.compute + exp.timing.uplink_fed + exp.timing.uplink_main,
+        rtol=1e-12)
+    np.testing.assert_array_equal(exp.timing.edge_of, assign)
+
+
+def test_edge_agg_backhaul_is_one_payload_per_edge(fcfg):
+    """Pre-aggregation makes the backhaul load independent of cell size."""
+    agg = EdgeAggTopology(num_edges=2, backhaul_bps=1e6)
+    cloud = EdgeCloudTopology(num_edges=2, backhaul_bps=1e6)
+    assign = np.array([0, 0, 0, 0, 1, 1])
+    np.testing.assert_allclose(agg.backhaul_seconds(fcfg, assign, 0.5),
+                               np.full(K, fcfg.s_c_bits / 1e6))
+    expect = np.where(assign == 0, 4 * fcfg.s_c_bits, 2 * fcfg.s_c_bits) / 1e6
+    np.testing.assert_allclose(cloud.backhaul_seconds(fcfg, assign, 0.5),
+                               expect)
+
+
+def test_relay_backhaul_scales_with_local_iterations(fcfg):
+    """The relay forwards every local iteration's smashed activations, so
+    its hop couples into η through Lemma 2's V(η)."""
+    relay = RelayTopology(num_edges=1, backhaul_bps=1e6)
+    assign = np.zeros(K, int)
+    for eta in (0.3, 0.6):
+        V = dm.local_iters(fcfg, eta)
+        expect = K * (fcfg.s_c_bits + V * fcfg.s_bits) / 1e6
+        np.testing.assert_allclose(relay.backhaul_seconds(fcfg, assign, eta),
+                                   np.full(K, expect), rtol=1e-12)
+    # more aggressive η (fewer local iters) shrinks the relay hop
+    assert (relay.backhaul_seconds(fcfg, assign, 0.6)[0]
+            < relay.backhaul_seconds(fcfg, assign, 0.3)[0])
+
+
+def test_infinite_backhaul_degenerates_to_wireless_only(run_cfg):
+    topo = EdgeCloudTopology(num_edges=2, backhaul_bps=np.inf)
+    exp = _fresh(run_cfg, topology=topo, scenario="geo-blockfade")
+    np.testing.assert_allclose(
+        exp.timing.total,
+        exp.timing.compute + exp.timing.uplink_fed + exp.timing.uplink_main)
+    np.testing.assert_array_equal(exp.timing.backhaul, np.zeros(K))
+
+
+# ---------------------------------------------------------------------------
+# Per-edge-cell allocation
+# ---------------------------------------------------------------------------
+
+
+def test_subnetwork_keeps_full_bandwidth_pool(fcfg):
+    net = get_scenario("geo-blockfade").round_network(fcfg, 0, 0)
+    sub = subnetwork(net, np.array([1, 3]))
+    assert sub.K == 2 and sub.B_c == net.B_c and sub.B_s == net.B_s
+    np.testing.assert_array_equal(sub.g_c, net.g_c[[1, 3]])
+    np.testing.assert_array_equal(sub.D_k, net.D_k[[1, 3]])
+
+
+def test_cell_allocation_respects_per_cell_budgets(run_cfg):
+    """Each edge owns an independent bandwidth pool: the solved bandwidths
+    must fit the budget per cell (not just globally)."""
+    exp = _fresh(run_cfg, eta=None, topology="edge-cloud",
+                 scenario="geo-blockfade")
+    for m in range(exp.topology.num_edges):
+        members = exp.assign == m
+        if not np.any(members):
+            continue
+        assert np.sum(exp.alloc.b_c[members]) <= exp.net.B_c * (1 + 1e-6)
+        assert np.sum(exp.alloc.b_s[members]) <= exp.net.B_s * (1 + 1e-6)
+    assert np.isfinite(exp.alloc.T) and exp.alloc.feasible
+
+
+def test_proposed_beats_ba_in_every_cell(run_cfg):
+    """The paper's 47.63%-style comparison, per edge cell: the per-cell
+    Lemma-3 solve + topology-level η sweep must beat the unoptimised BA
+    baseline in every non-empty cell."""
+    kw = dict(eta=None, topology="edge-cloud", scenario="geo-blockfade")
+    prop = _fresh(run_cfg, allocator="proposed", **kw)
+    ba = _fresh(run_cfg, allocator="BA", **kw)
+    np.testing.assert_array_equal(prop.assign, ba.assign)
+    fcfg, topo = prop.fcfg, prop.topology
+    T_prop = cell_latency(fcfg, prop.net, prop.alloc, prop.assign, topo,
+                          prop.alloc.eta)
+    T_ba = cell_latency(fcfg, ba.net, ba.alloc, ba.assign, topo,
+                        ba.alloc.eta)
+    for m in range(topo.num_edges):
+        if np.isnan(T_prop[m]):
+            continue
+        assert T_prop[m] < T_ba[m], (m, T_prop, T_ba)
+    assert prop.alloc.T < ba.alloc.T
+
+
+# ---------------------------------------------------------------------------
+# Two-tier aggregation inside the single-trace contract
+# ---------------------------------------------------------------------------
+
+
+def test_edge_agg_round_matches_flat_weighted_fedavg(run_cfg, stream):
+    """Per-edge then cross-edge weighted fedavg == the flat reduction (up to
+    float associativity) when weights are the D_k sizes — so edge-side
+    pre-aggregation changes the traffic pattern, not the training math."""
+    from repro.data.tokens import client_batches
+
+    batches = client_batches(stream, 0, K)
+    flat = _fresh(run_cfg, scenario="geo-blockfade")
+    tiered = _fresh(run_cfg, scenario="geo-blockfade", topology="edge-agg")
+    res_a = flat.run_round(batches)
+    res_b = tiered.run_round(batches)
+    np.testing.assert_allclose(
+        float(res_a.metrics["loss_round_start"]),
+        float(res_b.metrics["loss_round_start"]), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves((res_a.state.lora_c, res_a.state.lora_s)),
+                    jax.tree.leaves((res_b.state.lora_c, res_b.state.lora_s))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-6)
+
+
+def test_edge_agg_campaign_single_trace_under_reattachment(run_cfg, stream):
+    """The one-hot assignment matrix is a value-only argument: per-round
+    re-attachment under mobility must never retrace the round function."""
+    exp = _fresh(run_cfg, topology=EdgeAggTopology(num_edges=3),
+                 scenario=DriftScenario(step_m=150.0))
+    assigns = []
+    res = exp.run(num_rounds=3, stream=stream, cohort=COHORT,
+                  resample_channel=True,
+                  on_round=lambda rec: assigns.append(exp.assign.copy()))
+    assert res.num_rounds == 3
+    assert exp.trace_count == 1  # the acceptance bar
+    assert any(not np.array_equal(assigns[0], a) for a in assigns[1:])
+
+
+# ---------------------------------------------------------------------------
+# star: bit-identical to the pre-topology engine
+# ---------------------------------------------------------------------------
+
+# Golden trajectory captured from the pre-topology engine (PR 3 HEAD):
+# smoke fedsllm-100m (lora rank 4 / alpha 8), K=6, EB, eta=0.5, cohort 4,
+# deadline = 0.7-quantile of the constructor timing, 3 resampled rounds.
+GOLDEN_DEADLINE = 110.61189496631023
+GOLDEN_LOSSES = (5.556713104248047, 5.560213088989258, 5.551358222961426)
+GOLDEN_ROUND_TIMES = (110.61189496631023, 110.61189496631023,
+                      104.78746742360255)
+GOLDEN_TOTAL_TIME = 326.01125735622304
+
+
+def test_star_campaign_matches_pre_topology_golden(run_cfg, stream):
+    """The default topology IS the legacy engine: simulator quantities
+    reproduce the pre-topology trajectory exactly, training losses to float
+    tolerance (the golden was captured before repro.net existed)."""
+    exp = _fresh(run_cfg)
+    assert exp.topology.name == "star" and exp.assign is None
+    deadline = float(np.quantile(exp.timing.total, 0.7))
+    np.testing.assert_allclose(deadline, GOLDEN_DEADLINE, rtol=1e-12)
+    res = exp.run(num_rounds=3, stream=stream, cohort=COHORT,
+                  deadline=deadline, resample_channel=True)
+    np.testing.assert_allclose([r.round_time for r in res.records],
+                               GOLDEN_ROUND_TIMES, rtol=1e-12)
+    np.testing.assert_allclose(res.total_time, GOLDEN_TOTAL_TIME, rtol=1e-12)
+    np.testing.assert_allclose(res.history("loss_round_start"),
+                               GOLDEN_LOSSES, rtol=1e-5)
+    assert res.topology == "star" and exp.trace_count == 1
+
+
+def test_star_explicit_equals_default(run_cfg, stream):
+    """Experiment() == Experiment(topology="star"), bit-exact."""
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    res_a = _fresh(run_cfg).run(num_rounds=2, **kw)
+    res_b = _fresh(run_cfg, topology="star").run(num_rounds=2, **kw)
+    assert res_a.total_time == res_b.total_time
+    for ra_, rb in zip(res_a.records, res_b.records):
+        assert ra_.metrics == rb.metrics
+    for a, b in zip(jax.tree.leaves((res_a.state.lora_c, res_a.state.lora_s)),
+                    jax.tree.leaves((res_b.state.lora_c, res_b.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Joint reallocation + checkpoints on hierarchical graphs
+# ---------------------------------------------------------------------------
+
+
+def test_edge_cloud_realloc_bounded_traces_and_resume(run_cfg, stream,
+                                                      tmp_path):
+    """The acceptance bar: an edge-cloud campaign with reallocate=True runs
+    N rounds with trace_count ≤ len(eta_buckets), and checkpoint-resume is
+    bit-identical (per-round re-attachment and per-cell re-solves replay
+    exactly)."""
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True,
+              reallocate=True)
+    mk = lambda: _fresh(run_cfg, eta=0.2, topology="edge-cloud",  # noqa: E731
+                        scenario="geo-blockfade")
+    exp = mk()
+    full = exp.run(num_rounds=4, **kw)
+    assert full.num_rounds == 4
+    assert exp.trace_count <= len(exp.eta_buckets)
+    for rec in full.records:
+        assert rec.eta in exp.eta_buckets
+
+    ckpt = str(tmp_path / "camp")
+    mk().run(num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    rest = mk().run(num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    assert [r.round for r in rest.records] == [2, 3]
+    for ra_, rb in zip(full.records[2:], rest.records):
+        assert ra_.metrics == rb.metrics and ra_.eta == rb.eta
+    for a, b in zip(jax.tree.leaves((full.state.lora_c, full.state.lora_s)),
+                    jax.tree.leaves((rest.state.lora_c, rest.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_refuses_different_topology(run_cfg, stream, tmp_path):
+    ckpt = str(tmp_path / "camp")
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    _fresh(run_cfg, topology="edge-cloud", scenario="geo-blockfade").run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    with pytest.raises(ValueError, match="topology"):
+        _fresh(run_cfg, topology="star", scenario="geo-blockfade").run(
+            num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    # the same topology resumes fine
+    res = _fresh(run_cfg, topology="edge-cloud", scenario="geo-blockfade").run(
+        num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    assert [r.round for r in res.records] == [2, 3]
+
+
+def test_resume_refuses_different_attachment_digest(run_cfg, stream,
+                                                    tmp_path):
+    """Same topology name, different graph (edge count) — the attachment
+    digest catches what the name cannot."""
+    ckpt = str(tmp_path / "camp")
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True)
+    _fresh(run_cfg, topology=EdgeCloudTopology(num_edges=2),
+           scenario="geo-blockfade").run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    with pytest.raises(ValueError, match="topo_digest"):
+        _fresh(run_cfg, topology=EdgeCloudTopology(num_edges=3),
+               scenario="geo-blockfade").run(
+            num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+
+
+def test_topology_digest_covers_params(run_cfg, fcfg):
+    sc = get_scenario("geo-blockfade")
+    assert (EdgeCloudTopology(num_edges=2).digest(fcfg, sc, 0)
+            != EdgeCloudTopology(num_edges=3).digest(fcfg, sc, 0))
+    assert (EdgeCloudTopology(backhaul_bps=1e6).digest(fcfg, sc, 0)
+            != EdgeCloudTopology(backhaul_bps=1e9).digest(fcfg, sc, 0))
+    # star's digest is parameter-free and never touches the scenario
+    assert (Topology().digest(fcfg, sc, 0)
+            == get_topology("star").digest(fcfg, sc, 1))
+
+
+# ---------------------------------------------------------------------------
+# Topology-dimension sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hier_sweep(run_cfg, stream):
+    return run_sweep(run_cfg, 2, topologies=("star", "edge-cloud"),
+                     scenarios=("geo-blockfade",), allocators=("EB", "BA"),
+                     stream=stream, cohort=COHORT, exp_overrides={"cut": 1})
+
+
+def test_sweep_per_topology_rows(hier_sweep):
+    assert len(hier_sweep.records) == 2 * 1 * 2 * 2  # topo × scen × alloc × r
+    for row in hier_sweep.records:
+        assert row["topology"] in ("star", "edge-cloud")
+    summary = hier_sweep.summary()
+    assert {(r["topology"], r["allocator"]) for r in summary} == {
+        ("star", "EB"), ("star", "BA"),
+        ("edge-cloud", "EB"), ("edge-cloud", "BA")}
+    for row in summary:
+        assert row["rounds"] == 2 and row["total_time"] > 0
+
+
+def test_sweep_delay_reduction_per_topology(hier_sweep):
+    """The paper's comparison, reported per topology: the optimised
+    allocator beats BA on the flat graph AND in the hierarchical split."""
+    red = hier_sweep.delay_reduction(allocator="EB", baseline="BA")
+    assert set(red) == {"star/geo-blockfade", "edge-cloud/geo-blockfade"}
+    for pct in red.values():
+        assert 0 < pct < 100
+
+
+def test_sweep_json_records_topologies(hier_sweep, tmp_path):
+    import json
+
+    with open(hier_sweep.to_json(str(tmp_path / "hier.json"))) as f:
+        payload = json.load(f)
+    assert payload["topologies"] == ["star", "edge-cloud"]
+    assert set(payload["delay_reduction"]["pct_by_scenario"]) == {
+        "star/geo-blockfade", "edge-cloud/geo-blockfade"}
