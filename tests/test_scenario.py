@@ -15,7 +15,8 @@ from repro.core import delay_model as dm
 from repro.core.resource_alloc import quantize_eta
 from repro.sim import events
 from repro.sim.scenario import (DriftScenario, HeteroScenario, OutageScenario,
-                                Scenario)
+                                Scenario, ShadowingScenario,
+                                SHADOW_STREAM_TAG)
 from repro.sim.sweep import run_sweep
 
 K = 6
@@ -55,7 +56,7 @@ def _fresh(run_cfg, **kw):
 
 def test_scenario_registry_contents():
     assert {"frozen", "blockfade", "geo-blockfade", "drift", "hetero",
-            "outage"} <= set(scenarios.names())
+            "outage", "shadowing"} <= set(scenarios.names())
 
 
 def test_unknown_scenario_lists_known_names():
@@ -83,7 +84,7 @@ def test_get_scenario_accepts_instances():
 
 @pytest.mark.parametrize("name", sorted({"frozen", "blockfade",
                                          "geo-blockfade", "drift", "hetero",
-                                         "outage"}))
+                                         "outage", "shadowing"}))
 def test_scenario_deterministic_in_seed_and_round(name, fcfg):
     sc = get_scenario(name)
     a = sc.round_network(fcfg, campaign_seed=3, round_idx=5)
@@ -100,7 +101,7 @@ def test_scenario_deterministic_in_seed_and_round(name, fcfg):
 
 
 @pytest.mark.parametrize("name", ["blockfade", "geo-blockfade", "drift",
-                                  "hetero", "outage"])
+                                  "hetero", "outage", "shadowing"])
 def test_fading_scenarios_vary_across_rounds(name, fcfg):
     sc = get_scenario(name)
     assert not np.array_equal(sc.round_network(fcfg, 0, 1).g_c,
@@ -260,6 +261,132 @@ def test_scenario_parameter_validation():
         OutageScenario(burst_rounds=0)
     with pytest.raises(ValueError, match="align"):
         HeteroScenario(f_tiers_hz=(1e9,), p_tiers_dbm=(10.0, 4.0))
+    with pytest.raises(ValueError, match="rho"):
+        ShadowingScenario(rho=1.0)
+    with pytest.raises(ValueError, match="rho"):
+        ShadowingScenario(rho=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# shadowing: Gauss-Markov AR(1) correlated shadowing (ROADMAP open item #1)
+# ---------------------------------------------------------------------------
+
+
+def test_shadowing_pure_in_seed_and_round(fcfg):
+    sc = ShadowingScenario(rho=0.7)
+    np.testing.assert_array_equal(sc.shadow_db(fcfg, 3, 5),
+                                  sc.shadow_db(fcfg, 3, 5))
+    assert not np.array_equal(sc.shadow_db(fcfg, 3, 5),
+                              sc.shadow_db(fcfg, 4, 5))
+
+
+def test_shadowing_follows_ar1_recursion_exactly(fcfg):
+    """S_r == ρ·S_{r-1} + σ·sqrt(1-ρ²)·ε_r with ε_r from the tagged stream —
+    the process is AR(1) by construction, not just approximately."""
+    rho = 0.8
+    sc = ShadowingScenario(rho=rho)
+    seed = 11
+    eps = np.random.default_rng([seed, SHADOW_STREAM_TAG]).normal(
+        size=(8, 2, fcfg.num_clients))
+    for r in range(1, 8):
+        expect = (rho * sc.shadow_db(fcfg, seed, r - 1)
+                  + fcfg.shadow_std_db * np.sqrt(1 - rho**2) * eps[r])
+        np.testing.assert_allclose(sc.shadow_db(fcfg, seed, r), expect,
+                                   rtol=1e-10, atol=1e-10)
+    # round 0 is the stationary draw σ·ε_0
+    np.testing.assert_allclose(sc.shadow_db(fcfg, seed, 0),
+                               fcfg.shadow_std_db * eps[0], rtol=1e-12)
+
+
+def test_shadowing_autocorrelation_and_marginal(fcfg):
+    """Lag-1 sample autocorrelation ≈ ρ and the per-round marginal keeps the
+    paper's N(0, σ²) (stationary variance independent of the round)."""
+    rho = 0.9
+    sc = ShadowingScenario(rho=rho)
+    fields = np.stack([sc.shadow_db(fcfg, s, r)
+                       for s in range(40) for r in range(2)])  # (80, 2, K)
+    pairs = fields.reshape(40, 2, -1)
+    x, y = pairs[:, 0, :].ravel(), pairs[:, 1, :].ravel()
+    corr = np.corrcoef(x, y)[0, 1]
+    assert abs(corr - rho) < 0.1
+    # stationary marginal: std ≈ shadow_std_db at a late round too
+    late = np.stack([ShadowingScenario(rho=rho).shadow_db(fcfg, s, 9)
+                     for s in range(60)])
+    assert abs(np.std(late) - fcfg.shadow_std_db) < 1.0
+
+
+def test_shadowing_rho_zero_is_iid_innovations(fcfg):
+    """ρ=0 degenerates to i.i.d. per-round draws from the tagged stream."""
+    sc = ShadowingScenario(rho=0.0)
+    eps = np.random.default_rng([0, SHADOW_STREAM_TAG]).normal(
+        size=(3, 2, fcfg.num_clients))
+    np.testing.assert_allclose(sc.shadow_db(fcfg, 0, 2),
+                               fcfg.shadow_std_db * eps[2], rtol=1e-12)
+
+
+def test_shadowing_network_keeps_geometry_and_digest_covers_rho(fcfg):
+    sc = ShadowingScenario()
+    n1, n5 = sc.round_network(fcfg, 0, 1), sc.round_network(fcfg, 0, 5)
+    np.testing.assert_array_equal(n1.xy, n5.xy)  # geometry is large-scale
+    assert not np.array_equal(n1.g_c, n5.g_c)    # the field still evolves
+    assert (ShadowingScenario(rho=0.5).digest(fcfg, 0)
+            != ShadowingScenario(rho=0.9).digest(fcfg, 0))
+
+
+# ---------------------------------------------------------------------------
+# warm realloc default: cross-scenario optimality audit (ROADMAP item #3)
+# ---------------------------------------------------------------------------
+
+
+def test_warm_realloc_optimality_audit_across_scenarios(fcfg):
+    """The campaign default ``realloc_search="warm"`` (±5-step window around
+    the constructor's solved η*) must match the full 0.01-grid sweep to
+    <1e-6 relative delay on per-round draws of EVERY registered scenario —
+    the audit that justified flipping the default (ROADMAP open item #3)."""
+    from repro.core import resource_alloc as ra
+
+    for name in scenarios.names():
+        sc = get_scenario(name)
+        anchor = ra.optimize(fcfg, sc.initial_network(fcfg, 0), "EB",
+                             eta_search="coarse")
+        for r in (0, 2):
+            net = sc.round_network(fcfg, 0, r)
+            full = ra.optimize(fcfg, net, "EB")  # paper-faithful full grid
+            warm = ra.optimize(fcfg, net, "EB", eta_search="warm",
+                               eta0=anchor.eta)
+            assert warm.T <= full.T * (1 + 1e-6), (name, r, warm.T, full.T)
+
+
+def test_warm_realloc_audit_proposed_solver(fcfg):
+    """The warm default also holds for the headline 'proposed' exact solver
+    (spot-checked — the EB audit above covers every scenario): warm around
+    the constructor's η* matches the coarse+refine sweep, whose optimum
+    equals the full grid's on smooth T(η)."""
+    from repro.core import resource_alloc as ra
+
+    for name in ("geo-blockfade", "hetero"):
+        sc = get_scenario(name)
+        anchor = ra.optimize(fcfg, sc.initial_network(fcfg, 0), "proposed",
+                             eta_search="coarse")
+        net = sc.round_network(fcfg, 0, 1)
+        full = ra.optimize(fcfg, net, "proposed", eta_search="coarse")
+        warm = ra.optimize(fcfg, net, "proposed", eta_search="warm",
+                           eta0=anchor.eta)
+        assert warm.T <= full.T * (1 + 1e-6), (name, warm.T, full.T)
+
+
+def test_campaign_default_realloc_search_is_warm(run_cfg, stream):
+    """reallocate=True without realloc_search= uses the warm local window —
+    bit-identical to asking for it explicitly."""
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True,
+              reallocate=True)
+    res_default = _fresh(run_cfg, scenario="geo-blockfade").run(
+        num_rounds=2, **kw)
+    res_warm = _fresh(run_cfg, scenario="geo-blockfade").run(
+        num_rounds=2, realloc_search="warm", **kw)
+    for ra_, rb in zip(res_default.records, res_warm.records):
+        assert ra_.eta == rb.eta and ra_.alloc.T == rb.alloc.T
+        assert ra_.metrics == rb.metrics
 
 
 def test_custom_scenario_subclass_pluggable(run_cfg, stream):
