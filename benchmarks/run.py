@@ -12,7 +12,10 @@ run machine-readably to ``results/BENCH_round.json`` (name →
   fedsllm_round   one full Algorithm-1+2 global round (8 clients)
   campaign        multi-round campaign engine (resampled channels, elastic
                   cohort, deadline stragglers; must stay at 1 jit trace)
-  kernels         lora / attention / ssd micro-benches
+  des             event-driven execution schedules: pipelined-schedule
+                  campaign vs sync (simulated-delay saving must be > 0)
+  kernels         lora / attention / ssd micro-benches (median of
+                  KERNEL_REPEATS calls; gated with per-entry thresholds)
   roofline        summary over dry-run artifacts (if present)
 """
 
@@ -170,6 +173,43 @@ def bench_campaign():
          f"scenario=geo-blockfade_sim={res2.total_time:.1f}s")
 
 
+def bench_des():
+    """Event-driven schedules: a pipelined-schedule campaign vs sync.
+
+    The derived number is the simulated-delay saving the microbatch overlap
+    buys on identical rounds (the acceptance bar: strictly positive); the
+    wall-clock entry (``campaign_pipelined``) rides the compare.py gate so
+    a planner-path slowdown fails CI like any other hot path."""
+    from repro.api import Experiment
+    from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                              get_arch, smoke_variant)
+    from repro.data.tokens import TokenStream
+
+    cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                        fedsllm=FedsLLMConfig(num_clients=8))
+    stream = TokenStream(2, 64, cfg.vocab_size, seed=0)
+
+    def campaign(schedule):
+        exp = Experiment.from_config(run_cfg, eta=0.5, cut=1, allocator="EB",
+                                     schedule=schedule)
+        exp.run(num_rounds=1, stream=stream, cohort=4)  # compile
+        t0 = time.perf_counter()
+        res = exp.run(num_rounds=3, stream=stream, cohort=4)
+        jax.block_until_ready(res.state.lora_c)
+        us = (time.perf_counter() - t0) / res.num_rounds * 1e6
+        assert exp.trace_count == 1, exp.trace_count
+        return us, res
+
+    us_sync, res_sync = campaign("sync")
+    us_pipe, res_pipe = campaign("pipelined")
+    saved = 100.0 * (1.0 - res_pipe.total_time / res_sync.total_time)
+    assert res_pipe.total_time < res_sync.total_time, (
+        res_pipe.total_time, res_sync.total_time)
+    emit("campaign_pipelined", us_pipe,
+         f"sim_saved_vs_sync={saved:.2f}%_sync_round={us_sync:.0f}us_traces=1")
+
+
 def bench_kernels():
     from benchmarks.kernel_bench import bench_attention, bench_lora, bench_ssd
 
@@ -241,6 +281,8 @@ def main() -> None:
         bench_fedsllm_round()
     if which in ("all", "campaign"):
         bench_campaign()
+    if which in ("all", "des"):
+        bench_des()
     if which in ("all", "kernels"):
         bench_kernels()
     if which in ("all", "pipeline"):

@@ -17,6 +17,8 @@
     PYTHONPATH=src python examples/fedsllm_end_to_end.py --scenario drift
     PYTHONPATH=src python examples/fedsllm_end_to_end.py \
         --topology edge-cloud --scenario geo-blockfade
+    PYTHONPATH=src python examples/fedsllm_end_to_end.py \
+        --schedule pipelined          # or: async / semi-async (no barrier)
 """
 
 import argparse
@@ -24,8 +26,8 @@ import time
 
 import numpy as np
 
-from repro.api import (Experiment, allocators, get_scenario, get_topology,
-                       scenarios, topologies)
+from repro.api import (Experiment, allocators, get_schedule, get_scenario,
+                       get_topology, scenarios, schedules, topologies)
 from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
                           get_arch, smoke_variant)
 from repro.data.tokens import TokenStream
@@ -42,10 +44,16 @@ def main():
                     help=f"network graph, one of {topologies.names()}; "
                          f"non-star needs a geometry scenario "
                          f"(e.g. --scenario geo-blockfade)")
+    ap.add_argument("--schedule", default="sync",
+                    help=f"execution discipline, one of {schedules.names()}; "
+                         f"pipelined overlaps client/server microbatches, "
+                         f"async/semi-async drop the round barrier and "
+                         f"aggregate arrivals staleness-weighted")
     args = ap.parse_args()
     # unknown names fail fast with the knowns listed, like every registry
     scenario = get_scenario(args.scenario)
     topology = get_topology(args.topology)
+    schedule = get_schedule(args.schedule)
 
     # --- model: LoRA-adapted small LM, split at A_min of the depth ---------
     cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
@@ -72,7 +80,7 @@ def main():
     run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"], fedsllm=fcfg)
     exp = Experiment.from_config(run_cfg, allocator="proposed", net=net,
                                  alloc=best, scenario=scenario,
-                                 topology=topology)
+                                 topology=topology, schedule=schedule)
     print(exp.describe())
     deadline = float(np.quantile(exp.timing.total, 0.8))  # cuts slowest ~20%
 

@@ -39,15 +39,23 @@ known ones):
                    ``edge-agg`` | ``relay`` — multi-hop client→edge→cloud
                    splits with per-hop delay composition and per-edge-cell
                    resource allocation (``repro.net.topology``)
+  ``schedules``    the execution discipline: ``sync`` (default, the
+                   round-synchronous engine, bit-identical) | ``pipelined``
+                   (microbatch overlap across the wireless split) |
+                   ``async`` | ``semi-async`` (no round barrier — clients
+                   rejoin on completion, arrivals aggregate
+                   staleness-weighted; ``repro.des.schedules``)
 
-``Experiment.sweep`` fans a grid of topologies × scenarios × allocators into
-one tidy records table (``repro.sim.sweep``) for cross-family comparisons.
+``Experiment.sweep`` fans a grid of topologies × scenarios × allocators ×
+schedules into one tidy records table (``repro.sim.sweep``) for
+cross-family comparisons.
 """
 
 from repro.api.aggregators import aggregators, get_aggregator
 from repro.api.allocators import allocators, get_allocator
 from repro.api.compressors import Compressor, compressors, get_compressor
 from repro.api.experiment import Experiment, RoundResult
+from repro.des.schedules import Schedule, get_schedule, schedules
 from repro.net.topology import Topology, get_topology, topologies
 from repro.registry import Registry
 from repro.sim.campaign import CampaignResult, RoundRecord
@@ -63,4 +71,5 @@ __all__ = [
     "compressors", "get_compressor", "Compressor",
     "scenarios", "get_scenario", "Scenario",
     "topologies", "get_topology", "Topology",
+    "schedules", "get_schedule", "Schedule",
 ]

@@ -36,8 +36,18 @@ def _fedavg_weighted(stacked, weights=None, mask=None):
     return federated.fedavg(stacked, weights=weights, mask=mask)
 
 
+# the mean family takes hier_aggregate's segment_sum fast path; "uniform"
+# members ignore the weights argument (Algorithm 1 as written)
+_fedavg_uniform.mean_family = "uniform"
+_fedavg_weighted.mean_family = "weighted"
+
 aggregators.register("median")(federated.coordinate_median)
 aggregators.register("trimmed_mean")(federated.trimmed_mean)
+# staleness-aware weighted FedAvg (w ∝ D_k/(1+staleness)^β): the async
+# execution schedules pre-fold the per-arrival discount into the weights
+# (federated.staleness_discount), so the registered entry takes the uniform
+# (stacked, weights, mask) signature like every other aggregator
+aggregators.register("staleness")(federated.staleness_weighted)
 
 
 def get_aggregator(name: str):

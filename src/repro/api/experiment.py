@@ -34,6 +34,7 @@ from repro.core import delay_model as dm
 from repro.core import fedsllm
 from repro.core.fedsllm import FedsLLMState, RoundTiming
 from repro.core.resource_alloc import Allocation, quantize_eta
+from repro.des.schedules import Schedule, get_schedule
 from repro.net.topology import Topology, get_topology
 
 
@@ -67,6 +68,7 @@ class Experiment:
                  compressor: str = "none", compressor_kw: Optional[dict] = None,
                  scenario: Union[str, "Scenario"] = "blockfade",
                  topology: Union[str, Topology] = "star",
+                 schedule: Union[str, Schedule] = "sync",
                  seed: int = 0, remat: bool = False, dp_clip: float = 0.0,
                  dp_noise: float = 0.0, eta_search: str = "coarse",
                  lora_rank: int = 8, key: Optional[jax.Array] = None,
@@ -95,6 +97,13 @@ class Experiment:
         # which hop (5th axis; ``star`` is the legacy flat graph and leaves
         # every path below bit-identical)
         self.topology = get_topology(topology)
+        # the schedule decides how client work and server aggregation
+        # interleave across campaign rounds (6th axis; ``sync`` is the
+        # round-synchronous default and bit-identical to the pre-schedule
+        # engine; ``pipelined``/``async``/``semi-async`` re-time — and for
+        # the async family re-order — which client states feed aggregation,
+        # all through value-only round-function arguments)
+        self.schedule = get_schedule(schedule)
         # campaign engine re-solves (reallocate=True) with the same strategy
         self._allocate = allocate
         self._eta_search = eta_search
@@ -171,6 +180,10 @@ class Experiment:
         flat default, bit-identical to the pre-topology engine) |
         ``edge-cloud`` | ``edge-agg`` | ``relay`` — non-star topologies
         need a geometry-carrying scenario (e.g. ``geo-blockfade``).
+        ``schedule=`` selects the execution discipline
+        (``repro.des.schedules``): ``sync`` (the round-synchronous default,
+        bit-identical to the pre-schedule engine) | ``pipelined`` |
+        ``async`` | ``semi-async``.
         ``run_cfg.shape`` is *not* consumed here: batch geometry comes from
         the ``batches`` pytree handed to :meth:`run_round` (shape configs
         drive the data-stream construction at call sites).  Keyword
@@ -202,9 +215,10 @@ class Experiment:
             # trace-counting wrapper: bumps only when jit (re)traces, so
             # campaigns can assert they never recompile across rounds
             def _counted_round_fn(state, batches, mask, key, weights,
-                                  assign=None):
+                                  assign=None, update_scale=None):
                 self._traces += 1
-                return raw(state, batches, mask, key, weights, assign)
+                return raw(state, batches, mask, key, weights, assign,
+                           update_scale)
 
             fn = jax.jit(_counted_round_fn)
             self._round_fns[key] = fn
@@ -280,13 +294,22 @@ class Experiment:
 
     def run_round(self, batches, key: Optional[jax.Array] = None,
                   mask: Optional[jax.Array] = None,
-                  client_ids: Optional[np.ndarray] = None) -> RoundResult:
+                  client_ids: Optional[np.ndarray] = None,
+                  weight_scale: Optional[np.ndarray] = None,
+                  update_scale: Optional[float] = None) -> RoundResult:
         """One global round: train (Algorithms 1+2) + simulated wall-clock.
 
         ``batches``: pytree with leaves stacked ``(C, ...)``, one slice per
         cohort client.  ``mask``: optional ``(C,)`` survivor mask.
         ``client_ids``: which simulated users this cohort is (aggregation
         weights become their ``D_k``); default: the first ``C`` users.
+        ``weight_scale``: optional ``(C,)`` multiplier on the D_k weights —
+        the async schedules' relative staleness discount ``1/(1+s)^β``
+        rides here, a value-only argument like the mask (no retrace).
+        ``update_scale``: optional scalar server mixing rate α on the
+        aggregated update (Δw ← Δw + α·h̄) — the async schedules' ABSOLUTE
+        staleness damping (a normalized weighted mean cancels any common
+        per-client discount, so damping must scale the update itself).
         ``key``: optional PRNG key for the DP noise; when None, a per-round
         key is derived inside the trace from the experiment seed and the
         global round counter (so noise never repeats across rounds).
@@ -302,13 +325,17 @@ class Experiment:
             weights = self.client_weights(C)
         else:
             weights = jnp.asarray(self.net.D_k[ids], jnp.float32)
+        if weight_scale is not None:
+            weights = weights * jnp.asarray(weight_scale, jnp.float32)
         assign = None
         if self.topology.two_tier and self.assign is not None:
             M = self.topology.num_edges
             assign = jnp.asarray(
                 np.eye(M, dtype=np.float32)[np.asarray(self.assign)[ids]])
+        scale = (None if update_scale is None
+                 else jnp.asarray(update_scale, jnp.float32))
         self.state, metrics = self._round_fn(self.state, batches, mask, key,
-                                             weights, assign)
+                                             weights, assign, scale)
         return RoundResult(self.state, metrics, self.timing)
 
     def run(self, num_rounds: Optional[int] = None, **kwargs) -> "CampaignResult":
@@ -361,6 +388,6 @@ class Experiment:
                 f"lora={lora_param_count(self.cfg)/1e6:.2f}M "
                 f"agg={self.aggregator_name} alloc={self.allocator_name} "
                 f"codec={self.compressor_name} scenario={self.scenario.name} "
-                f"topo={self.topology.name} "
+                f"topo={self.topology.name} sched={self.schedule.name} "
                 f"T*={self.alloc.T:.1f}s η*={self.alloc.eta:.2f} "
                 f"round={float(np.max(self.timing.total)):.2f}s")

@@ -43,6 +43,43 @@ def fedavg(stacked, weights: Optional[jax.Array] = None, mask: Optional[jax.Arra
     return jax.tree.map(one, stacked)
 
 
+# fedavg is safe for the segment-sum two-tier fast path and uses `weights`
+# when given (see hier_aggregate; "uniform" family members ignore weights)
+fedavg.mean_family = "weighted"
+
+
+def staleness_discount(staleness, beta: float = 0.5) -> np.ndarray:
+    """Host-side staleness discount 1/(1+s)^β (numpy; the async schedule's
+    per-arrival weight scale — multiplied onto D_k before the round fn)."""
+    return (1.0 + np.asarray(staleness, float)) ** (-float(beta))
+
+
+def staleness_weighted(stacked, weights: Optional[jax.Array] = None,
+                       mask: Optional[jax.Array] = None,
+                       staleness: Optional[jax.Array] = None,
+                       beta: float = 0.5):
+    """Staleness-aware FedAvg:  w_k ∝ D_k / (1 + staleness_k)^β.
+
+    The asynchronous-aggregation rule (FedAsync / FedBuff): an update
+    computed ``staleness`` global versions ago is polynomially discounted
+    before the weighted average, so slow clients still contribute but never
+    dominate fresh updates.  Mask-aware like every aggregator (masked-out
+    clients contribute nothing regardless of staleness); ``staleness=None``
+    degenerates to plain (weighted) fedavg, which is how the registered
+    ``"staleness"`` aggregator behaves when the schedule passes the
+    discount pre-folded into ``weights`` (``staleness_discount``)."""
+    leaves = jax.tree.leaves(stacked)
+    if not leaves or staleness is None:
+        return fedavg(stacked, weights=weights, mask=mask)
+    K = leaves[0].shape[0]
+    w = jnp.ones(K, jnp.float32) if weights is None else weights.astype(jnp.float32)
+    w = w * (1.0 + jnp.asarray(staleness, jnp.float32)) ** (-beta)
+    return fedavg(stacked, weights=w, mask=mask)
+
+
+staleness_weighted.mean_family = "weighted"
+
+
 def _client_weight_mask(leaves, mask):
     """(K,) float mask broadcastable against each leaf of a stacked tree."""
     K = leaves[0].shape[0]
@@ -110,6 +147,13 @@ def trimmed_mean(stacked, weights: Optional[jax.Array] = None,
     return jax.tree.map(one, stacked)
 
 
+# edge count above which hier_aggregate's mean-family fast path switches
+# from the bit-identical batched masked sums (O(M·K·leaf) broadcast) to the
+# O(K·leaf) segment_sum scatter — the hundreds-of-edges regime, where no
+# bit-compat contract with the old unrolled loop exists
+SEGMENT_MIN_EDGES = 32
+
+
 def hier_aggregate(aggregate, stacked, assign,
                    weights: Optional[jax.Array] = None,
                    mask: Optional[jax.Array] = None):
@@ -125,6 +169,29 @@ def hier_aggregate(aggregate, stacked, assign,
     its surviving clients' total weight (empty cells are masked out).  For
     (weighted) fedavg the two-tier result equals the flat reduction up to
     float associativity; robust aggregators become per-edge robust.
+
+    The mean-family aggregators (``fedavg``/``weighted``/``staleness`` —
+    marked with a ``mean_family`` attribute) take a vectorised fast path
+    whose trace size is independent of M (the unrolled loop builds M
+    aggregate calls — fine at M=2, hopeless at M=64+).  Two regimes:
+
+      * M ≤ ``SEGMENT_MIN_EDGES``: tier 1 is the SAME full-K masked sums
+        the unrolled loop computes, batched over the edge axis — XLA fuses
+        the one-hot broadcast into the reduction, and a batched reduce is
+        BIT-IDENTICAL to the per-edge reduces (asserted exhaustively in
+        ``tests/test_federated.py``), so existing edge-agg campaigns
+        reproduce exactly;
+      * M > ``SEGMENT_MIN_EDGES``: one ``jax.ops.segment_sum`` scatter-add
+        over the client axis — O(K·leaf) memory instead of the batched
+        path's O(M·K·leaf) broadcast, the regime hundreds-of-edges graphs
+        need.  A scatter accumulates members sequentially while a
+        vectorised reduce builds a SIMD tree, so this branch agrees with
+        the unrolled loop only up to float associativity (≈1 ulp; exact
+        whenever every cell has ≤ 2 surviving members) — no bit-compat
+        contract exists at that scale.
+
+    Robust aggregators (median/trimmed) keep the unrolled per-edge path —
+    an order statistic has no segment reduction.
     """
     leaves = jax.tree.leaves(stacked)
     if not leaves:
@@ -133,15 +200,75 @@ def hier_aggregate(aggregate, stacked, assign,
     w = jnp.ones(K, jnp.float32) if weights is None else weights.astype(jnp.float32)
     if mask is not None:
         w = w * mask.astype(jnp.float32)
-    per_edge, edge_w = [], []
-    for m in range(M):  # M is small and static — unrolled in the trace
-        member = assign[:, m]
-        cell_mask = member if mask is None else member * mask.astype(jnp.float32)
-        per_edge.append(aggregate(stacked, weights=weights, mask=cell_mask))
-        edge_w.append(jnp.sum(w * member))
-    stacked_edges = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_edge)
-    ew = jnp.stack(edge_w)
+    mode = getattr(aggregate, "mean_family", None)
+    if mode is not None:
+        base = (jnp.ones(K, jnp.float32)
+                if (mode == "uniform" or weights is None)
+                else weights.astype(jnp.float32))
+        if M <= SEGMENT_MIN_EDGES:
+            # (M, K) per-cell weight vectors, multiplied in the exact
+            # order fedavg's unrolled calls would: base · (member · mask)
+            cell = (assign.T if mask is None
+                    else assign.T * mask.astype(jnp.float32)[None, :])
+            w1 = base[None, :] * cell
+            denom = jnp.maximum(jnp.sum(w1, axis=1), 1e-12)
+            wn = w1 / denom[:, None]  # (M, K)
+
+            def one(x):
+                xf = x.astype(jnp.float32)
+                wb = wn.reshape((M, K) + (1,) * (x.ndim - 1))
+                return jnp.sum(xf[None] * wb, axis=1).astype(x.dtype)
+
+            stacked_edges = jax.tree.map(one, stacked)
+            ew = jnp.sum(w[None, :] * assign.T, axis=1)
+        else:
+            # one-hot rows -> member edge index (value-only, like assign)
+            ids = jnp.argmax(assign, axis=1)
+            w1 = base if mask is None else base * mask.astype(jnp.float32)
+            denom = jnp.maximum(
+                jax.ops.segment_sum(w1, ids, num_segments=M), 1e-12)
+            wn = w1 / denom[ids]
+
+            def one(x):
+                wb = wn.reshape((K,) + (1,) * (x.ndim - 1))
+                return jax.ops.segment_sum(x.astype(jnp.float32) * wb, ids,
+                                           num_segments=M).astype(x.dtype)
+
+            stacked_edges = jax.tree.map(one, stacked)
+            ew = jax.ops.segment_sum(w, ids, num_segments=M)
+    else:
+        per_edge, edge_w = [], []
+        for m in range(M):  # M is small and static — unrolled in the trace
+            member = assign[:, m]
+            cell_mask = member if mask is None else member * mask.astype(jnp.float32)
+            per_edge.append(aggregate(stacked, weights=weights, mask=cell_mask))
+            edge_w.append(jnp.sum(w * member))
+        stacked_edges = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_edge)
+        ew = jnp.stack(edge_w)
     return aggregate(stacked_edges, weights=ew, mask=(ew > 0).astype(jnp.float32))
+
+
+def hier_aggregate_unrolled(aggregate, stacked, assign,
+                            weights: Optional[jax.Array] = None,
+                            mask: Optional[jax.Array] = None):
+    """The reference unrolled two-tier reduction (M aggregate calls).
+
+    Kept as the bit-equality oracle for the ``segment_sum`` fast path and as
+    the only correct path for non-mean aggregators; ``hier_aggregate``
+    dispatches here automatically for those."""
+    stripped = _strip_mean_family(aggregate)
+    return hier_aggregate(stripped, stacked, assign, weights=weights,
+                          mask=mask)
+
+
+def _strip_mean_family(aggregate):
+    """A wrapper without the ``mean_family`` marker (forces the unrolled
+    path) that leaves the aggregation arithmetic untouched."""
+
+    def agg(stacked, weights=None, mask=None):
+        return aggregate(stacked, weights=weights, mask=mask)
+
+    return agg
 
 
 def apply_update(global_tree, avg_h, scale: float = 1.0):

@@ -94,6 +94,15 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
     state.round)`` — fresh noise every global round (a fixed fallback key
     would silently reuse the same noise each round), derived inside the
     trace so multi-round campaigns keep a single jit compilation.
+
+    The returned round_fn also takes ``update_scale=None`` — an optional
+    scalar server mixing rate on the aggregated update (Δw ← Δw + α·h̄),
+    the FedAsync-style damping the asynchronous execution schedules drive
+    with α = 1/(1+staleness)^β.  A weight-vector discount alone cannot
+    express it: the weighted mean NORMALIZES, so with a single surviving
+    arrival any per-client discount cancels.  Pass a jnp scalar (value-only
+    — one jit trace per campaign); ``None`` keeps the exact legacy
+    arithmetic (α = 1).
     """
     xi = fcfg.xi if xi is None else xi
     delta = fcfg.delta if delta is None else delta
@@ -130,7 +139,7 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
         return h[0], h[1], losses[-1]
 
     def round_fn(state: FedsLLMState, batches, mask=None, key=None,
-                 weights=None, assign=None):
+                 weights=None, assign=None, update_scale=None):
         K = jax.tree.leaves(batches)[0].shape[0]
         if two_tier and assign is not None:
             # hierarchical fed-server role: per-edge then cross-edge
@@ -162,9 +171,12 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
             h_c = privacy.clip_and_noise_updates(h_c, key, clip_norm=dp_clip,
                                                  noise_multiplier=dp_noise)
 
-        # 4. aggregate + update (fed server for Δw_c, main server for Δw_s)
-        new_lc = federated.apply_update(state.lora_c, agg(h_c))
-        new_ls = federated.apply_update(state.lora_s, agg(h_s))
+        # 4. aggregate + update (fed server for Δw_c, main server for Δw_s);
+        # α = 1 (the paper's rule) unless an async schedule passes its
+        # staleness mixing rate
+        alpha = 1.0 if update_scale is None else update_scale
+        new_lc = federated.apply_update(state.lora_c, agg(h_c), alpha)
+        new_ls = federated.apply_update(state.lora_s, agg(h_s), alpha)
         metrics = {
             "loss_round_start": jnp.mean(loss0),
             "loss_local_final": jnp.mean(last_loss),

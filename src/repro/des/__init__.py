@@ -1,0 +1,20 @@
+"""Event-driven execution: discrete-event simulator, queueing, schedules.
+
+``engine`` is the deterministic event-heap simulator (events popped in
+``(time, seq)`` order — a run is a pure function of its inputs);
+``queueing`` adds shared-resource service models (FIFO / processor-sharing
+backhaul and GPU, downlink broadcast cost, the M/D/1 reference formula);
+``schedules`` exposes the execution discipline as the 6th name registry —
+``sync`` (the bit-identical round-synchronous default) | ``pipelined``
+(microbatch overlap across the wireless split) | ``async`` (immediate
+rejoin + staleness-weighted aggregation) | ``semi-async`` (FedBuff
+buffer-K).
+"""
+
+from repro.des import queueing
+from repro.des.engine import Event, EventSim
+from repro.des.schedules import (RoundPlan, Schedule, get_schedule,
+                                 schedules)
+
+__all__ = ["Event", "EventSim", "queueing",
+           "RoundPlan", "Schedule", "get_schedule", "schedules"]

@@ -94,7 +94,8 @@ def train_fedsllm(args):
                                  aggregator=args.aggregator,
                                  allocator=args.allocator, compressor=args.codec,
                                  scenario=args.scenario,
-                                 topology=args.topology)
+                                 topology=args.topology,
+                                 schedule=args.schedule)
     print(exp.describe())
 
     stream = TokenStream(args.batch, args.seq, cfg.vocab_size, seed=0)
@@ -166,6 +167,11 @@ def main():
                     help="network graph (repro.net.topology): star | "
                          "edge-cloud | edge-agg | relay; non-star needs a "
                          "geometry scenario, e.g. --scenario geo-blockfade")
+    ap.add_argument("--schedule", default="sync",
+                    help="execution discipline (repro.des.schedules): sync "
+                         "| pipelined | async | semi-async; async runs the "
+                         "full population and aggregates arrivals "
+                         "staleness-weighted")
     args = ap.parse_args()
     if args.fedsllm:
         train_fedsllm(args)

@@ -68,6 +68,7 @@ from repro.core import delay_model as dm
 from repro.core import fedsllm
 from repro.core.fedsllm import RoundTiming
 from repro.core.resource_alloc import Allocation
+from repro.des import queueing
 from repro.net import allocation as hier_alloc
 from repro.net import delay as hier_delay
 from repro.registry import Registry
@@ -165,28 +166,72 @@ class StarTopology(Topology):
 
 
 class HierTopology(Topology):
-    """Shared machinery for multi-hop graphs: edge ring, attachment,
+    """Shared machinery for multi-hop graphs: edge placement, attachment,
     localization and the per-cell allocator; subclasses define what the
-    backhaul hop carries."""
+    backhaul hop carries.
 
-    def __init__(self, num_edges: int = 2, backhaul_bps: float = 200e6):
+    ``placement`` picks where the M edges stand: ``"ring"`` (the legacy
+    deterministic circle at ``area_m/4``) or ``"kmeans"`` — facility
+    location over the drawn user geometry (Lloyd's algorithm seeded at the
+    ring, so it is a pure deterministic function of the scenario's
+    large-scale draw; mobility scenarios re-place per round with the rest
+    of localization).  ``backhaul_model`` prices the edge→cloud hop:
+    ``"serial"`` (the legacy fixed-capacity pipe — every cell member waits
+    the full cell transfer), ``"fifo"`` or ``"ps"`` — the SHARED metro
+    backhaul as a queueing resource (``repro.des.queueing``): cells contend,
+    each transfer's arrival is its client's wireless completion, and the
+    per-client hop is its own wait+service.  ``downlink_bps`` > 0 adds the
+    per-round global-model broadcast cost (one multicast per cell,
+    ``queueing.broadcast_seconds``); 0 keeps the paper's negligible-downlink
+    convention.
+    """
+
+    def __init__(self, num_edges: int = 2, backhaul_bps: float = 200e6,
+                 placement: str = "ring", backhaul_model: str = "serial",
+                 downlink_bps: float = 0.0):
         if num_edges < 1:
             raise ValueError(f"num_edges must be ≥ 1, got {num_edges}")
         if backhaul_bps <= 0:
             raise ValueError(f"backhaul_bps must be > 0, got {backhaul_bps}")
+        if placement not in ("ring", "kmeans"):
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"known: ['kmeans', 'ring']")
+        if backhaul_model not in ("serial", "fifo", "ps"):
+            raise ValueError(f"unknown backhaul_model {backhaul_model!r}; "
+                             f"known: ['fifo', 'ps', 'serial']")
         self.num_edges = int(num_edges)
         self.backhaul_bps = float(backhaul_bps)
+        self.placement = placement
+        self.backhaul_model = backhaul_model
+        self.downlink_bps = float(downlink_bps)
 
     def params(self) -> dict:
-        return {"num_edges": self.num_edges, "backhaul_bps": self.backhaul_bps}
+        return {"num_edges": self.num_edges, "backhaul_bps": self.backhaul_bps,
+                "placement": self.placement,
+                "backhaul_model": self.backhaul_model,
+                "downlink_bps": self.downlink_bps}
 
-    def edge_xy(self, fcfg: FedsLLMConfig) -> np.ndarray:
-        """Edges evenly spaced on a ring of radius ``area_m/4`` — a
+    def edge_xy(self, fcfg: FedsLLMConfig,
+                net: Optional[dm.Network] = None) -> np.ndarray:
+        """(M, 2) edge positions.
+
+        ``ring``: evenly spaced on a circle of radius ``area_m/4`` — a
         deterministic function of (M, area) so no RNG stream is consumed
-        (the scenario owns every random draw)."""
+        (the scenario owns every random draw).  ``kmeans``: Lloyd's
+        facility location over the round's user geometry, initialised AT
+        the ring — still RNG-free, pure in the scenario's draw, and it
+        re-places edges as geometry evolves (``drift``)."""
         ang = 2.0 * np.pi * np.arange(self.num_edges) / self.num_edges
         r = fcfg.area_m / 4.0
-        return np.stack([r * np.cos(ang), r * np.sin(ang)], axis=1)
+        ring = np.stack([r * np.cos(ang), r * np.sin(ang)], axis=1)
+        if self.placement == "ring":
+            return ring
+        if net is None or net.xy is None:
+            raise ValueError(
+                f"placement 'kmeans' places edges over the user geometry; "
+                f"topology {self.name!r} got no positions (use a "
+                f"geometry-carrying scenario like geo-blockfade)")
+        return _lloyd(net.xy, ring)
 
     def attach(self, fcfg: FedsLLMConfig, net: dm.Network) -> np.ndarray:
         if net.xy is None:
@@ -196,14 +241,14 @@ class HierTopology(Topology):
                 f"draws don't record positions); use geo-blockfade, drift, "
                 f"hetero, outage or shadowing")
         # nearest edge == minimum distance path loss (monotone in distance)
-        d = np.linalg.norm(net.xy[:, None, :] - self.edge_xy(fcfg)[None, :, :],
-                           axis=2)
+        d = np.linalg.norm(
+            net.xy[:, None, :] - self.edge_xy(fcfg, net)[None, :, :], axis=2)
         return np.argmin(d, axis=1)
 
     def localize(self, fcfg: FedsLLMConfig, net: dm.Network
                  ) -> tuple[dm.Network, np.ndarray]:
         assign = self.attach(fcfg, net)
-        exy = self.edge_xy(fcfg)[assign]
+        exy = self.edge_xy(fcfg, net)[assign]
         # the SAME path-loss law that produced net.pl_db, on the relative
         # client→edge positions — keep the round's shadowing realisation
         # and swap only the distance term: g' = g · 10^((pl_bs − pl_edge)/10)
@@ -223,9 +268,33 @@ class HierTopology(Topology):
                      alloc: Allocation, eta: float,
                      assign: Optional[np.ndarray]) -> RoundTiming:
         wireless = fedsllm.simulate_round_time(fcfg, net, alloc, eta)
-        return hier_delay.compose(wireless,
-                                  self.backhaul_seconds(fcfg, assign, eta),
-                                  assign)
+        return hier_delay.compose(
+            wireless,
+            self.backhaul_hop(fcfg, assign, eta,
+                              np.asarray(wireless.total, float)),
+            assign,
+            self.downlink_hop(fcfg, assign))
+
+    def backhaul_hop(self, fcfg: FedsLLMConfig, assign: np.ndarray,
+                     eta: float, totals: np.ndarray) -> np.ndarray:
+        """(K,) backhaul hop given per-client wireless completion times —
+        THE composition point for the edge→cloud leg (``round_timing`` and
+        the pipelined execution schedule both price through it, so the
+        serial-vs-queued dispatch lives in exactly one place)."""
+        if self.backhaul_model == "serial":
+            return self.backhaul_seconds(fcfg, assign, eta)
+        return self._queued_backhaul(fcfg, assign, eta,
+                                     np.asarray(totals, float))
+
+    def downlink_hop(self, fcfg: FedsLLMConfig,
+                     assign: np.ndarray) -> Optional[np.ndarray]:
+        """(K,) per-round global-model broadcast cost, or None when
+        disabled: one multicast per cell per round, cells broadcast in
+        parallel, every member pays the same wait."""
+        if self.downlink_bps <= 0:
+            return None
+        return np.full(len(assign), queueing.broadcast_seconds(
+            fcfg.s_c_bits, self.downlink_bps))
 
     # -- per-edge traffic on the backhaul hop ------------------------------
     def _cell_bits(self, fcfg: FedsLLMConfig, assign: np.ndarray,
@@ -242,8 +311,47 @@ class HierTopology(Topology):
 
     def backhaul_seconds(self, fcfg: FedsLLMConfig,
                          assign: np.ndarray, eta: float) -> np.ndarray:
+        """The legacy serial-pipe hop: (K,) per-client backhaul seconds —
+        all of a cell's traffic shares its pipe, every member waits the
+        full cell transfer (bit-identical to the pre-queueing engine; the
+        default ``backhaul_model="serial"``)."""
         bits = self._cell_bits(fcfg, assign, eta)
         return (bits / self.backhaul_bps)[assign]
+
+    def _backhaul_jobs(self, fcfg: FedsLLMConfig, assign: np.ndarray,
+                       eta: float, totals: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The queue's job list: ``(arrivals, bits, job_of_client)``.
+
+        Default: one job per client — its fed-traffic transfer arrives at
+        the metro queue when its wireless round completes.  ``edge-agg``
+        overrides with one job per edge (the pre-aggregated delta leaves
+        once the whole cell has reported)."""
+        K = len(assign)
+        counts = np.bincount(assign, minlength=self.num_edges)
+        per_client = (self._cell_bits(fcfg, assign, eta)
+                      / np.maximum(counts, 1))[assign]
+        return totals, per_client, np.arange(K)
+
+    def _queued_backhaul(self, fcfg: FedsLLMConfig, assign: np.ndarray,
+                         eta: float, totals: np.ndarray) -> np.ndarray:
+        """(K,) backhaul hop under the SHARED metro queue (``fifo``/``ps``):
+        cells contend for one ``backhaul_bps`` resource, and each client's
+        hop is its own job's wait + service (``repro.des.queueing``)."""
+        arrivals, bits, job_of = self._backhaul_jobs(fcfg, assign, eta,
+                                                     totals)
+        if self.backhaul_model == "fifo":
+            completion, _ = queueing.fifo(
+                arrivals, queueing.service_seconds(bits, self.backhaul_bps))
+        else:  # "ps"
+            completion = queueing.processor_sharing(
+                arrivals, np.asarray(bits, float), rate=self.backhaul_bps)
+        # an outage'd client (wireless total +inf) never reaches the queue:
+        # its hop is 0 so the composed path stays +inf instead of inf−inf
+        hop = np.zeros_like(totals)
+        finite = np.isfinite(totals)
+        hop[finite] = completion[job_of][finite] - totals[finite]
+        return hop
 
 
 @topologies.register("edge-cloud")
@@ -278,6 +386,15 @@ class EdgeAggTopology(HierTopology):
     def _cell_bits(self, fcfg, assign, eta):
         return np.full(self.num_edges, fcfg.s_c_bits)
 
+    def _backhaul_jobs(self, fcfg, assign, eta, totals):
+        # one pre-aggregated delta per NON-EMPTY edge; it leaves for the
+        # cloud once the cell's slowest member has reported, and every
+        # member of the cell rides its edge's job
+        edges = np.unique(assign)
+        arrivals = np.array([np.max(totals[assign == m]) for m in edges])
+        job_of = np.searchsorted(edges, assign)
+        return arrivals, np.full(len(edges), fcfg.s_c_bits), job_of
+
 
 @topologies.register("relay")
 class RelayTopology(HierTopology):
@@ -291,13 +408,37 @@ class RelayTopology(HierTopology):
 
     name = "relay"
 
-    def __init__(self, num_edges: int = 2, backhaul_bps: float = 50e6):
-        super().__init__(num_edges=num_edges, backhaul_bps=backhaul_bps)
+    def __init__(self, num_edges: int = 2, backhaul_bps: float = 50e6, **kw):
+        super().__init__(num_edges=num_edges, backhaul_bps=backhaul_bps, **kw)
 
     def _cell_bits(self, fcfg, assign, eta):
         counts = np.bincount(assign, minlength=self.num_edges)
         V = dm.local_iters(fcfg, eta)
         return counts * (fcfg.s_c_bits + V * fcfg.s_bits)
+
+
+def _lloyd(xy: np.ndarray, init_centroids: np.ndarray,
+           iters: int = 32) -> np.ndarray:
+    """Deterministic Lloyd's k-means over user positions (facility location).
+
+    Initialised at the caller's centroids (the ring), no RNG: the result is
+    a pure function of the geometry, so campaigns stay reproducible and the
+    checkpoint digest covers the placement through the attachment it
+    induces.  Empty clusters keep their previous centroid (the ring point —
+    it simply attracts nobody)."""
+    cent = np.asarray(init_centroids, float).copy()
+    for _ in range(iters):
+        d = np.linalg.norm(xy[:, None, :] - cent[None, :, :], axis=2)
+        lab = np.argmin(d, axis=1)
+        new = cent.copy()
+        for m in range(len(cent)):
+            members = xy[lab == m]
+            if len(members):
+                new[m] = members.mean(axis=0)
+        if np.allclose(new, cent, rtol=0, atol=1e-9):
+            break
+        cent = new
+    return cent
 
 
 def get_topology(spec: Union[str, Topology]) -> Topology:

@@ -93,11 +93,14 @@ def pipeline_round_time(stage_seconds: dict[str, np.ndarray | float],
 
 
 def split_stage_times(cfg_feds, net, eta: float, A: float, alloc,
-                      model_params=None) -> dict[str, np.ndarray]:
+                      model_params=None,
+                      downlink_frac: float = 0.1) -> dict[str, np.ndarray]:
     """Derive per-stage times from the paper's delay model + an allocation:
     client/server compute from eq. (10) split by A, uplink from t_s, and a
-    symmetric downlink estimate (the paper treats it as negligible — kept
-    explicit here so the pipeline model is conservative)."""
+    ``downlink_frac``-scaled downlink estimate (the paper treats the
+    downlink as negligible; the default 0.1 keeps the standalone pipeline
+    model conservative, while the ``pipelined`` execution schedule passes 0
+    so its stage sum matches eq. (15)'s round total exactly)."""
     from repro.core import delay_model as dm
 
     tau = dm.compute_time(cfg_feds, net, eta, A, model_params)
@@ -110,6 +113,6 @@ def split_stage_times(cfg_feds, net, eta: float, A: float, alloc,
         "client_fwd": 0.5 * t_cl,
         "uplink": np.asarray(alloc.t_s, float),
         "server": t_srv,
-        "downlink": 0.1 * np.asarray(alloc.t_s, float),  # high-power BS
+        "downlink": downlink_frac * np.asarray(alloc.t_s, float),  # high-power BS
         "client_bwd": 0.5 * t_cl,
     }

@@ -54,6 +54,15 @@ class RoundRecord:
     round_time: float  # simulated seconds this round cost the server
     cumulative_time: float  # simulated campaign wall-clock through this round
     eta: float = 0.0  # training η this round ran at (varies under reallocate)
+    # per-event timing records from the execution schedule (dicts in
+    # (time, seq) order: complete / timeout / aggregate), and the staleness
+    # each surviving update carried (async schedules; None under sync)
+    events: Optional[list] = None
+    staleness: Optional[np.ndarray] = None
+    # (C,) per-client completion times AS THE SCHEDULE PRICED THEM — under
+    # ``pipelined`` these differ from ``timing`` (which keeps the §III
+    # sequential pricing); the recorded mask/round_time derive from these
+    completion: Optional[np.ndarray] = None
 
     @property
     def cohort_size(self) -> int:
@@ -81,6 +90,7 @@ class CampaignResult:
     stopped_by: str
     scenario: str = "blockfade"  # channel-dynamics family the rounds ran under
     topology: str = "star"  # network graph the rounds ran over
+    schedule: str = "sync"  # execution discipline the rounds ran with
 
     @property
     def num_rounds(self) -> int:
@@ -169,7 +179,17 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
           remaining rounds bit-identically (everything is round-indexed).
           Non-campaign checkpoints, and checkpoints from a different
           campaign — seed, η, allocator, scenario name, large-scale-state
-          digest, topology name or attachment digest mismatch — are refused.
+          digest, topology name, attachment digest or execution-schedule
+          mismatch — are refused.
+
+    Execution schedule (``exp.schedule``, the 6th axis): ``sync`` (default)
+    keeps every semantics above bit-identical; ``pipelined`` re-times
+    completions with microbatch overlap (masks/clock follow); ``async`` /
+    ``semi-async`` replace the round barrier with a deterministic event
+    timeline — round r is the r-th server aggregation, the full population
+    rides through the round function and the mask/staleness weights select
+    the arrivals (``repro.des.schedules``).  Per-event timing records land
+    on ``RoundRecord.events``.
     """
     fcfg = exp.fcfg
     K = fcfg.num_clients
@@ -229,6 +249,11 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                         ("topology", exp.topology.name),
                         ("topo_digest", exp.topology.digest(fcfg, scenario,
                                                             campaign_seed)),
+                        ("schedule", exp.schedule.name),
+                        # params change the timeline (β, buffer_k, M) the
+                        # same way scenario/topology params change theirs
+                        ("schedule_params",
+                         repr(sorted(exp.schedule.params().items()))),
                         ("reallocate", reallocate)]
             if not (reallocate and meta.get("reallocate")):
                 # under joint reallocation η is derived per-round state, not
@@ -252,49 +277,62 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
     start = min(int(np.asarray(jax.device_get(exp.state.round))), target)
 
     base_alloc = exp.alloc  # the last *solved* allocation (retiming input)
+    # the execution schedule (6th axis) decides which client states feed
+    # each aggregation, at what staleness weight, and what the round costs
+    # on the simulated clock; ``sync`` replays the legacy event order
+    # bit-identically, the async family pre-simulates the whole timeline
+    search = exp._eta_search if realloc_search is None else realloc_search
+    planner = exp.schedule.planner(
+        exp, campaign_seed=campaign_seed, start=start, target=target,
+        cohort=cohort, fixed_cohort=fixed_cohort, deadline=deadline,
+        resample_channel=resample_channel, reallocate=reallocate,
+        realloc_search=search)
     records: list[RoundRecord] = []
     for r in range(start, target):
         # (a) per-round scenario: channel evolution + re-attachment +
-        # allocation + timing
+        # allocation + timing (``events.round_state`` — under
+        # reallocate=True problems (16)/(17) re-solve jointly on this
+        # round's realisation, per edge cell under a hierarchical topology,
+        # and the solved η* is adopted quantized onto the η-bucket grid so
+        # the Lemma 1/2 schedule tracks the channel without recompiling)
         if resample_channel:
-            exp.net, exp.assign = events.localized_round_network(
-                fcfg, campaign_seed, r, scenario=scenario,
-                topology=exp.topology)
+            # timeline planners (async) already priced every round while
+            # simulating run durations — reuse instead of re-solving
+            priced = getattr(planner, "pricing", {}).get(r)
+            net, assign, alloc, _, timing = (
+                priced if priced is not None else events.round_state(
+                    exp, campaign_seed, r, base_alloc=base_alloc,
+                    reallocate=reallocate, realloc_search=search))
+            exp.net, exp.assign, exp.alloc = net, assign, alloc
             if reallocate:
-                # joint re-solve of problems (16)/(17) on this round's
-                # realisation (per edge cell under a hierarchical
-                # topology); the solved η* is adopted (quantized onto the
-                # η-bucket grid) so the Lemma 1/2 schedule tracks the
-                # channel without recompiling the round function per round
-                search = exp._eta_search if realloc_search is None else realloc_search
-                kw = {"eta_search": search}
-                if search == "warm":
-                    kw["eta0"] = exp._eta0
-                base_alloc = exp.topology.allocate(
-                    fcfg, exp.net, exp.assign, exp._allocate,
-                    strategy=exp.allocator_name, **kw)
-                exp.alloc = base_alloc
-                exp.set_eta(base_alloc.eta)
-            else:
-                exp.alloc = events.retime_allocation(fcfg, exp.net, base_alloc)
-            exp.reprice_timing()
+                base_alloc = alloc
+                exp.set_eta(alloc.eta)
+            exp.timing = timing
 
-        # (b) elastic cohort + (c) deadline stragglers
+        # (b) elastic cohort + (c) schedule: completion events → straggler
+        # mask, staleness weights and the round's simulated wall-clock
         ids = (np.arange(cohort) if fixed_cohort is not None
                else events.cohort_ids(r, K, cohort, seed=campaign_seed))
-        mask_np = events.straggler_mask(exp.timing.total, ids, deadline)
+        plan = planner.round_plan(r, ids)
+        if plan.client_ids is not None:  # async family: full population
+            ids = plan.client_ids
+        mask_np = plan.mask
         mask = None if mask_np is None else jnp.asarray(mask_np)
-        round_time = events.round_wall_clock(exp.timing.total, ids, deadline)
+        round_time = plan.round_time
 
         # (d) train the round through the ONE jitted round function
-        res = exp.run_round(batches_fn(r, ids), mask=mask, client_ids=ids)
+        res = exp.run_round(batches_fn(r, ids), mask=mask, client_ids=ids,
+                            weight_scale=plan.weight_scale,
+                            update_scale=plan.update_scale)
 
         cumulative += round_time
         rec = RoundRecord(
             round=r, client_ids=np.asarray(ids), mask=mask_np,
             metrics={k: float(v) for k, v in res.metrics.items()},
             alloc=exp.alloc, timing=exp.timing,
-            round_time=round_time, cumulative_time=cumulative, eta=exp.eta)
+            round_time=round_time, cumulative_time=cumulative, eta=exp.eta,
+            events=plan.events, staleness=plan.staleness,
+            completion=plan.completion)
         records.append(rec)
         if on_round is not None:
             on_round(rec)
@@ -311,7 +349,8 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
     return CampaignResult(records=records, state=exp.state,
                           total_time=cumulative, rounds_lemma1=rounds_lemma1,
                           stopped_by=stopped_by, scenario=scenario.name,
-                          topology=exp.topology.name)
+                          topology=exp.topology.name,
+                          schedule=exp.schedule.name)
 
 
 def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
@@ -325,4 +364,6 @@ def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
                "topology": exp.topology.name,
                "topo_digest": exp.topology.digest(exp.fcfg, exp.scenario,
                                                   campaign_seed),
+               "schedule": exp.schedule.name,
+               "schedule_params": repr(sorted(exp.schedule.params().items())),
                "reallocate": reallocate})

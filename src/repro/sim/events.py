@@ -23,7 +23,7 @@ import numpy as np
 from repro.config import FedsLLMConfig
 from repro.core import delay_model as dm
 from repro.core import federated
-from repro.core.resource_alloc import Allocation
+from repro.core.resource_alloc import Allocation, quantize_eta
 
 # Mixing stride between the campaign seed and the round index (same prime
 # idiom as ``federated.client_sample`` — distinct streams per round without
@@ -75,6 +75,47 @@ def localized_round_network(fcfg: FedsLLMConfig, campaign_seed: int,
     if topology is None:
         return net, None
     return topology.localize(fcfg, net)
+
+
+def round_state(exp, campaign_seed: int, round_idx: int, *,
+                base_alloc: Optional[Allocation] = None,
+                resample: bool = True, reallocate: bool = False,
+                realloc_search: str = "warm"):
+    """The full per-round pricing of round ``round_idx``, without mutating
+    the experiment: ``(net, assign, alloc, eta, timing)``.
+
+    This is the campaign loop's step (a) factored into a *pure* function of
+    ``(exp's constructor state, campaign_seed, round_idx)`` — the loop calls
+    it to advance the experiment, and the asynchronous execution schedules
+    (``repro.des.schedules``) call it to price client run durations at
+    arbitrary round indices without disturbing the loop's state.  With
+    ``resample=False`` every round prices identically to the constructor
+    realisation (the frozen-channel semantics).  ``base_alloc`` is the last
+    *solved* allocation the stale-retiming path re-prices (defaults to the
+    experiment's current one); under ``reallocate=True`` the allocator
+    re-solves jointly and ``eta`` comes back quantized onto the
+    ``fcfg.eta_bucket`` grid exactly as ``Experiment.set_eta`` would adopt
+    it, so loop and schedule agree bit-for-bit on the round's timing.
+    """
+    fcfg = exp.fcfg
+    if not resample:
+        return exp.net, exp.assign, exp.alloc, exp.eta, exp.timing
+    net, assign = localized_round_network(fcfg, campaign_seed, round_idx,
+                                          scenario=exp.scenario,
+                                          topology=exp.topology)
+    if reallocate:
+        kw = {"eta_search": realloc_search}
+        if realloc_search == "warm":
+            kw["eta0"] = exp._eta0
+        alloc = exp.topology.allocate(fcfg, net, assign, exp._allocate,
+                                      strategy=exp.allocator_name, **kw)
+        eta = quantize_eta(alloc.eta, fcfg.eta_bucket, fcfg.eta_train_max)
+    else:
+        alloc = retime_allocation(fcfg, net,
+                                  exp.alloc if base_alloc is None else base_alloc)
+        eta = exp.eta
+    timing = exp.topology.round_timing(fcfg, net, alloc, eta, assign)
+    return net, assign, alloc, eta, timing
 
 
 def _transmit_time(bits: float, rate: np.ndarray) -> np.ndarray:

@@ -1,26 +1,30 @@
-"""Topology × scenario × allocator sweep runner.
+"""Topology × scenario × allocator × schedule sweep runner.
 
 One call fans a grid of network topologies × channel-dynamics scenarios ×
-resource-allocation strategies into identical campaigns over the same
-``RunConfig``, collecting every round of every cell into one tidy
-long-format records table — the shape the paper's Fig. 2 comparison wants:
-the proposed allocator's delay reduction vs the BA baseline, reproducible
-across every scenario family (mobility, device tiers, outages, …) and now
-per network graph (flat star vs hierarchical edge-cloud, …).
+resource-allocation strategies × execution schedules into identical
+campaigns over the same ``RunConfig``, collecting every round of every cell
+into one tidy long-format records table — the shape the paper's Fig. 2
+comparison wants: the proposed allocator's delay reduction vs the BA
+baseline, reproducible across every scenario family (mobility, device
+tiers, outages, …), per network graph (flat star vs hierarchical
+edge-cloud, …) and now per execution discipline (round-synchronous vs
+pipelined vs asynchronous — ``repro.des.schedules``).
 
     res = run_sweep(run_cfg, num_rounds=10, stream=stream,
                     topologies=("star", "edge-cloud"),
                     scenarios=("geo-blockfade", "drift"),
-                    allocators=("proposed", "BA"))
-    res.summary()          # one row per (topology, scenario, allocator) cell
-    res.delay_reduction()  # % delay saved vs BA, per topology × scenario
+                    allocators=("proposed", "BA"),
+                    schedules=("sync", "pipelined"))
+    res.summary()           # one row per (topo, scenario, alloc, sched) cell
+    res.delay_reduction()   # % delay saved vs BA, per remaining grid axes
+    res.schedule_speedup()  # % simulated time saved vs the sync schedule
     res.to_json("results/SWEEP.json")
 
 Also a CLI (the CI sweep smokes):
 
     PYTHONPATH=src python -m repro.sim.sweep --smoke \
-        --topologies star edge-cloud --scenarios geo-blockfade drift \
-        --allocators proposed BA --rounds 2 --out results/SWEEP_hier.json
+        --topologies star edge-cloud --scenarios geo-blockfade \
+        --schedules pipelined async --rounds 2 --out results/SWEEP_async.json
 """
 
 from __future__ import annotations
@@ -35,73 +39,124 @@ import numpy as np
 DEFAULT_SCENARIOS = ("blockfade", "geo-blockfade")
 DEFAULT_ALLOCATORS = ("proposed", "BA")
 DEFAULT_TOPOLOGIES = ("star",)
+DEFAULT_SCHEDULES = ("sync",)
 
 
 @dataclass
 class SweepResult:
     """A finished sweep: long-format per-round records + grid metadata."""
 
-    records: list[dict]  # one dict per (topology, scenario, allocator, round)
+    records: list[dict]  # one dict per (topology, scenario, allocator,
+    #                      schedule, round)
     scenarios: tuple[str, ...]
     allocators: tuple[str, ...]
     num_rounds: int
     meta: dict = field(default_factory=dict)  # cell-level info (traces, η*…)
     topologies: tuple[str, ...] = DEFAULT_TOPOLOGIES
+    schedules: tuple[str, ...] = DEFAULT_SCHEDULES
 
     def cell(self, scenario: str, allocator: str,
-             topology: Optional[str] = None) -> list[dict]:
+             topology: Optional[str] = None,
+             schedule: Optional[str] = None) -> list[dict]:
         """The per-round records of one grid cell, in round order.
 
-        ``topology`` may be omitted only on a single-topology grid (the
-        pre-topology call signature); on a multi-topology grid an explicit
-        name is required — silently merging graphs would hand callers
-        interleaved rounds from different campaigns."""
-        if topology is None:
-            if len(self.topologies) > 1:
-                raise ValueError(
-                    f"this sweep spans topologies {self.topologies}; "
-                    f"pass cell(scenario, allocator, topology=...)")
-            topology = self.topologies[0]
+        ``topology``/``schedule`` may be omitted only when the grid has a
+        single entry on that axis (the pre-axis call signatures); on a
+        multi-entry grid an explicit name is required — silently merging
+        graphs or disciplines would hand callers interleaved rounds from
+        different campaigns."""
+        topology = self._only("topologies", topology)
+        schedule = self._only("schedules", schedule)
         return [r for r in self.records
                 if r["scenario"] == scenario and r["allocator"] == allocator
-                and r.get("topology", "star") == topology]
+                and r.get("topology", "star") == topology
+                and r.get("schedule", "sync") == schedule]
+
+    def _only(self, axis: str, value: Optional[str]) -> str:
+        entries = getattr(self, axis)
+        if value is None:
+            if len(entries) > 1:
+                arg = "topology" if axis == "topologies" else "schedule"
+                raise ValueError(f"this sweep spans {axis} {entries}; pass "
+                                 f"cell(scenario, allocator, {arg}=...)")
+            return entries[0]
+        return value
+
+    def _grid(self):
+        for t in self.topologies:
+            for s in self.scenarios:
+                for a in self.allocators:
+                    for d in self.schedules:
+                        yield t, s, a, d
+
+    def _key(self, topology: str, scenario: str, schedule: str) -> str:
+        """Reporting key: scenario, prefixed/suffixed by whichever extra
+        axes the grid actually spans (single-axis grids keep the short
+        pre-axis keys, e.g. ``"blockfade"`` or ``"star/blockfade"``)."""
+        key = scenario if len(self.topologies) == 1 else f"{topology}/{scenario}"
+        return key if len(self.schedules) == 1 else f"{key}/{schedule}"
 
     def summary(self) -> list[dict]:
         """One row per cell: simulated campaign time, final loss, stragglers."""
         out = []
-        for t in self.topologies:
-            for s in self.scenarios:
-                for a in self.allocators:
-                    rows = self.cell(s, a, t)
-                    if not rows:
-                        continue
-                    slots = sum(r["cohort_size"] for r in rows)
-                    lost = sum(r["cohort_size"] - r["survivors"] for r in rows)
-                    out.append({
-                        "topology": t, "scenario": s, "allocator": a,
-                        "rounds": len(rows),
-                        "total_time": rows[-1]["cumulative_time"],
-                        "final_loss": rows[-1]["loss_round_start"],
-                        "straggler_rate": lost / max(slots, 1),
-                        **self.meta.get((t, s, a), {}),
-                    })
+        for t, s, a, d in self._grid():
+            rows = self.cell(s, a, t, d)
+            if not rows:
+                continue
+            slots = sum(r["cohort_size"] for r in rows)
+            lost = sum(r["cohort_size"] - r["survivors"] for r in rows)
+            out.append({
+                "topology": t, "scenario": s, "allocator": a, "schedule": d,
+                "rounds": len(rows),
+                "total_time": rows[-1]["cumulative_time"],
+                "final_loss": rows[-1]["loss_round_start"],
+                "straggler_rate": lost / max(slots, 1),
+                **self.meta.get((t, s, a, d), {}),
+            })
         return out
 
     def delay_reduction(self, allocator: str = "proposed",
                         baseline: str = "BA") -> dict[str, float]:
         """% reduction in simulated campaign delay — the paper's headline
         comparison (47.63% on the frozen draw), per scenario family and,
-        when the grid spans several topologies, per network graph (keys
-        become ``"topology/scenario"``)."""
+        when the grid spans several topologies/schedules, per network graph
+        and per execution discipline (keys become
+        ``"topology/scenario[/schedule]"``)."""
         out = {}
         for t in self.topologies:
             for s in self.scenarios:
-                a = self.cell(s, allocator, t)
-                b = self.cell(s, baseline, t)
-                if a and b and b[-1]["cumulative_time"] > 0:
-                    key = s if len(self.topologies) == 1 else f"{t}/{s}"
-                    out[key] = 100.0 * (1.0 - a[-1]["cumulative_time"]
-                                        / b[-1]["cumulative_time"])
+                for d in self.schedules:
+                    a = self.cell(s, allocator, t, d)
+                    b = self.cell(s, baseline, t, d)
+                    if a and b and b[-1]["cumulative_time"] > 0:
+                        out[self._key(t, s, d)] = 100.0 * (
+                            1.0 - a[-1]["cumulative_time"]
+                            / b[-1]["cumulative_time"])
+        return out
+
+    def schedule_speedup(self, baseline: str = "sync") -> dict[str, float]:
+        """% simulated campaign time saved by each non-baseline schedule vs
+        ``baseline`` on the same (topology, scenario, allocator) cell —
+        the event-driven counterpart of ``delay_reduction`` (keys
+        ``"topology/scenario/allocator/schedule"``; requires the baseline
+        schedule in the grid)."""
+        out = {}
+        if baseline not in self.schedules:
+            return out
+        for t in self.topologies:
+            for s in self.scenarios:
+                for a in self.allocators:
+                    base = self.cell(s, a, t, baseline)
+                    if not base or base[-1]["cumulative_time"] <= 0:
+                        continue
+                    for d in self.schedules:
+                        if d == baseline:
+                            continue
+                        rows = self.cell(s, a, t, d)
+                        if rows:
+                            out[f"{t}/{s}/{a}/{d}"] = 100.0 * (
+                                1.0 - rows[-1]["cumulative_time"]
+                                / base[-1]["cumulative_time"])
         return out
 
     def to_json(self, path: str) -> str:
@@ -118,10 +173,13 @@ class SweepResult:
             "topologies": list(self.topologies),
             "scenarios": list(self.scenarios),
             "allocators": list(self.allocators),
+            "schedules": list(self.schedules),
             "num_rounds": self.num_rounds,
             "records": self.records,
             "summary": self.summary(),
             "delay_reduction": reduction,
+            "schedule_speedup_pct": (self.schedule_speedup()
+                                     if len(self.schedules) >= 2 else None),
         }
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
@@ -134,11 +192,12 @@ def run_sweep(run_cfg, num_rounds: int, *,
               scenarios: Sequence[str] = DEFAULT_SCENARIOS,
               allocators: Sequence[str] = DEFAULT_ALLOCATORS,
               topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+              schedules: Sequence[str] = DEFAULT_SCHEDULES,
               stream=None, batches=None, batches_fn=None,
               exp_overrides: Optional[dict] = None,
               **campaign_kw) -> SweepResult:
-    """Run the same campaign through every (topology, scenario, allocator)
-    cell.
+    """Run the same campaign through every (topology, scenario, allocator,
+    schedule) cell.
 
     Each cell builds a fresh ``Experiment`` from ``run_cfg`` (so cells are
     independent and individually deterministic — the whole sweep is a pure
@@ -148,7 +207,8 @@ def run_sweep(run_cfg, num_rounds: int, *,
     ``{"eta_search": "coarse", "cut": 1}``); ``campaign_kw`` forwards to
     ``Experiment.run`` (e.g. ``cohort=``, ``deadline=``, ``reallocate=``).
     Non-star topologies need geometry-carrying scenarios in the grid (e.g.
-    ``geo-blockfade``/``drift`` — not the legacy ``blockfade``).
+    ``geo-blockfade``/``drift`` — not the legacy ``blockfade``); async
+    schedules run the full population regardless of ``cohort=``.
 
     Returns a :class:`SweepResult` whose ``records`` are tidy long-format
     rows — one per round per cell — ready for a dataframe or ``to_json``.
@@ -161,28 +221,32 @@ def run_sweep(run_cfg, num_rounds: int, *,
     for t in topologies:
         for s in scenarios:
             for a in allocators:
-                exp = Experiment.from_config(run_cfg, scenario=s, allocator=a,
-                                             topology=t, **exp_overrides)
-                res = exp.run(num_rounds=num_rounds, stream=stream,
-                              batches=batches, batches_fn=batches_fn,
-                              **campaign_kw)
-                for rec in res.records:
-                    records.append({
-                        "topology": t, "scenario": s, "allocator": a,
-                        "round": rec.round,
-                        "eta": rec.eta, "alloc_T": float(rec.alloc.T),
-                        "cohort_size": rec.cohort_size,
-                        "survivors": rec.survivors,
-                        "round_time": rec.round_time,
-                        "cumulative_time": rec.cumulative_time,
-                        **rec.metrics,
-                    })
-                meta[(t, s, a)] = {"trace_count": exp.trace_count,
-                                   "eta_star": float(exp.alloc.eta),
-                                   "eta_buckets": len(exp.eta_buckets)}
+                for d in schedules:
+                    exp = Experiment.from_config(run_cfg, scenario=s,
+                                                 allocator=a, topology=t,
+                                                 schedule=d, **exp_overrides)
+                    res = exp.run(num_rounds=num_rounds, stream=stream,
+                                  batches=batches, batches_fn=batches_fn,
+                                  **campaign_kw)
+                    for rec in res.records:
+                        records.append({
+                            "topology": t, "scenario": s, "allocator": a,
+                            "schedule": d,
+                            "round": rec.round,
+                            "eta": rec.eta, "alloc_T": float(rec.alloc.T),
+                            "cohort_size": rec.cohort_size,
+                            "survivors": rec.survivors,
+                            "round_time": rec.round_time,
+                            "cumulative_time": rec.cumulative_time,
+                            **rec.metrics,
+                        })
+                    meta[(t, s, a, d)] = {"trace_count": exp.trace_count,
+                                          "eta_star": float(exp.alloc.eta),
+                                          "eta_buckets": len(exp.eta_buckets)}
     return SweepResult(records=records, scenarios=tuple(scenarios),
                        allocators=tuple(allocators), num_rounds=num_rounds,
-                       meta=meta, topologies=tuple(topologies))
+                       meta=meta, topologies=tuple(topologies),
+                       schedules=tuple(schedules))
 
 
 def main(argv: Optional[list[str]] = None) -> None:
@@ -202,6 +266,9 @@ def main(argv: Optional[list[str]] = None) -> None:
                     default=list(DEFAULT_TOPOLOGIES),
                     help="network graphs (repro.net.topology); non-star "
                          "need geometry scenarios like geo-blockfade")
+    ap.add_argument("--schedules", nargs="+", default=list(DEFAULT_SCHEDULES),
+                    help="execution disciplines (repro.des.schedules): "
+                         "sync | pipelined | async | semi-async")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--cohort", type=int, default=4)
@@ -221,7 +288,7 @@ def main(argv: Optional[list[str]] = None) -> None:
     overrides = {} if args.eta is None else {"eta": args.eta}
     res = run_sweep(run_cfg, args.rounds, scenarios=args.scenarios,
                     allocators=args.allocators, topologies=args.topologies,
-                    stream=stream,
+                    schedules=args.schedules, stream=stream,
                     cohort=args.cohort, reallocate=args.reallocate,
                     exp_overrides=overrides)
     for row in res.summary():
@@ -231,6 +298,8 @@ def main(argv: Optional[list[str]] = None) -> None:
                                           args.allocators[-1]).items():
             print(f"# {s}: {args.allocators[0]} vs {args.allocators[-1]} "
                   f"delay reduction {pct:.2f}%")
+    for key, pct in res.schedule_speedup().items():
+        print(f"# {key}: simulated time saved vs sync {pct:.2f}%")
     print(f"# wrote {res.to_json(args.out)} ({len(res.records)} records)")
 
 

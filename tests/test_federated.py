@@ -137,3 +137,110 @@ def test_client_sample_deterministic():
     s2 = federated.client_sample(3, 50, 10, seed=7)
     np.testing.assert_array_equal(s1, s2)
     assert len(np.unique(s1)) == 10
+
+
+# ---------------------------------------------------------------------------
+# Two-tier (hier_aggregate): the segment_sum fast path
+# ---------------------------------------------------------------------------
+
+
+def _hier_fixture(K=7, M=3, seed=0):
+    rng = np.random.default_rng(seed)
+    assign = jnp.asarray(np.eye(M, dtype=np.float32)[rng.integers(0, M, K)])
+    # LoRA-shaped leaves in both fp32 and bf16, like the real update trees
+    tree = {"a": jnp.asarray(rng.normal(size=(K, 4, 2)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(K, 5)).astype(np.float32)
+                             ).astype(jnp.bfloat16)}
+    weights = jnp.asarray(rng.uniform(0.5, 2.0, K).astype(np.float32))
+    mask = jnp.asarray((rng.uniform(size=K) > 0.3).astype(np.float32))
+    return tree, assign, weights, mask
+
+
+def test_hier_aggregate_segment_bitequal_unrolled():
+    """The segment_sum fast path must reproduce the unrolled M-loop
+    BIT-exactly for every mean-family aggregator, with and without
+    weights/mask (zeros added by the masked full-K sums are exact no-ops,
+    and member contributions accumulate in the same client order)."""
+    from repro.api import aggregators
+
+    tree, assign, weights, mask = _hier_fixture()
+    for name in ("fedavg", "weighted", "staleness"):
+        agg = aggregators.get(name)
+        assert getattr(agg, "mean_family", None) is not None
+        for w, m in ((None, None), (weights, None), (None, mask),
+                     (weights, mask)):
+            fast = federated.hier_aggregate(agg, tree, assign,
+                                            weights=w, mask=m)
+            slow = federated.hier_aggregate_unrolled(agg, tree, assign,
+                                                     weights=w, mask=m)
+            for leaf in tree:
+                np.testing.assert_array_equal(
+                    np.asarray(fast[leaf], np.float32),
+                    np.asarray(slow[leaf], np.float32),
+                    err_msg=f"{name} leaf={leaf} w={w is not None} "
+                            f"m={m is not None}")
+
+
+def test_hier_aggregate_robust_still_unrolled_and_equal():
+    """Robust aggregators (no mean_family marker) keep the per-edge order
+    statistic — the dispatch must leave their results untouched."""
+    from repro.api import aggregators
+
+    tree, assign, weights, mask = _hier_fixture(seed=1)
+    for name in ("median", "trimmed_mean"):
+        agg = aggregators.get(name)
+        assert getattr(agg, "mean_family", None) is None
+        out = federated.hier_aggregate(agg, tree, assign, weights=weights,
+                                       mask=mask)
+        ref = federated.hier_aggregate_unrolled(agg, tree, assign,
+                                                weights=weights, mask=mask)
+        for leaf in tree:
+            np.testing.assert_array_equal(np.asarray(out[leaf], np.float32),
+                                          np.asarray(ref[leaf], np.float32))
+
+
+def test_hier_aggregate_no_trace_growth_at_m64():
+    """The fast path's jaxpr is independent of the edge count within each
+    regime (the ROADMAP scaling item): the batched branch costs the same
+    trace at M=4 and M=32, the segment_sum branch the same at M=33 and
+    M=64 — while the unrolled loop would grow linearly."""
+    from repro.api import aggregators
+
+    rng = np.random.default_rng(0)
+    K = 8
+    tree = {"w": jnp.asarray(rng.normal(size=(K, 3)).astype(np.float32))}
+    weights = jnp.ones(K)
+    agg = aggregators.get("weighted")
+
+    def eqns(M, aggregate):
+        assign = jnp.asarray(
+            np.eye(M, dtype=np.float32)[rng.integers(0, M, K)])
+        jaxpr = jax.make_jaxpr(
+            lambda t, w: federated.hier_aggregate(aggregate, t, assign, w)
+        )(tree, weights)
+        return len(jaxpr.jaxpr.eqns)
+
+    assert eqns(4, agg) == eqns(32, agg)  # batched branch
+    assert eqns(33, agg) == eqns(64, agg)  # segment_sum branch
+
+
+def test_hier_aggregate_segment_branch_matches_to_float_association():
+    """Above SEGMENT_MIN_EDGES the scatter-add branch takes over: it agrees
+    with the unrolled loop to float associativity (a scatter accumulates
+    members sequentially, a vectorised reduce builds a SIMD tree), and is
+    EXACT whenever every cell has ≤ 2 contributors."""
+    from repro.api import aggregators
+
+    rng = np.random.default_rng(2)
+    K, M = 24, 40
+    assert M > federated.SEGMENT_MIN_EDGES
+    ids = rng.integers(0, M, K)
+    assign = jnp.asarray(np.eye(M, dtype=np.float32)[ids])
+    tree = {"w": jnp.asarray(rng.normal(size=(K, 6)).astype(np.float32))}
+    weights = jnp.asarray(rng.uniform(0.5, 2.0, K).astype(np.float32))
+    agg = aggregators.get("weighted")
+    fast = federated.hier_aggregate(agg, tree, assign, weights=weights)
+    slow = federated.hier_aggregate_unrolled(agg, tree, assign,
+                                             weights=weights)
+    np.testing.assert_allclose(np.asarray(fast["w"]), np.asarray(slow["w"]),
+                               rtol=1e-6)

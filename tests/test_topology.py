@@ -14,6 +14,7 @@ from repro.api import Experiment, get_topology, topologies
 from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
                           get_arch, smoke_variant)
 from repro.core import delay_model as dm
+from repro.core import fedsllm
 from repro.net.allocation import cell_latency, subnetwork
 from repro.net.topology import (EdgeAggTopology, EdgeCloudTopology,
                                 HierTopology, RelayTopology, Topology)
@@ -452,3 +453,137 @@ def test_sweep_json_records_topologies(hier_sweep, tmp_path):
     assert payload["topologies"] == ["star", "edge-cloud"]
     assert set(payload["delay_reduction"]["pct_by_scenario"]) == {
         "star/geo-blockfade", "edge-cloud/geo-blockfade"}
+
+
+# ---------------------------------------------------------------------------
+# Optimised edge placement (kmeans facility location)
+# ---------------------------------------------------------------------------
+
+
+def test_kmeans_placement_is_pure_and_tightens_geometry(fcfg):
+    """kmeans places edges at the user geometry's facility-location optimum
+    (Lloyd from the ring): a pure function of the drawn geometry, and the
+    mean client→edge distance strictly tightens vs the ring."""
+    net = get_scenario("geo-blockfade").initial_network(fcfg, seed=0)
+    ring = EdgeCloudTopology(num_edges=3, placement="ring")
+    km = EdgeCloudTopology(num_edges=3, placement="kmeans")
+    exy_a = km.edge_xy(fcfg, net)
+    exy_b = km.edge_xy(fcfg, net)
+    np.testing.assert_array_equal(exy_a, exy_b)  # deterministic, no RNG
+
+    def mean_dist(topo):
+        assign = topo.attach(fcfg, net)
+        exy = topo.edge_xy(fcfg, net)[assign]
+        return float(np.mean(np.linalg.norm(net.xy - exy, axis=1)))
+
+    assert mean_dist(km) < mean_dist(ring)
+
+
+def test_kmeans_placement_critical_path_not_worse_than_ring(run_cfg):
+    """The per-cell allocation under kmeans placement yields an end-to-end
+    critical path (and worst-cell latency) no worse than the deterministic
+    ring on geo-blockfade — the whole point of facility location."""
+    ring = _fresh(run_cfg, scenario="geo-blockfade",
+                  topology=EdgeCloudTopology(num_edges=2, placement="ring"))
+    km = _fresh(run_cfg, scenario="geo-blockfade",
+                topology=EdgeCloudTopology(num_edges=2, placement="kmeans"))
+    assert float(np.max(km.timing.total)) <= float(np.max(ring.timing.total))
+    cells_ring = cell_latency(ring.fcfg, ring.net, ring.alloc, ring.assign,
+                              ring.topology, ring.eta)
+    cells_km = cell_latency(km.fcfg, km.net, km.alloc, km.assign,
+                            km.topology, km.eta)
+    assert np.nanmax(cells_km) <= np.nanmax(cells_ring)
+
+
+def test_kmeans_requires_geometry(run_cfg):
+    with pytest.raises(ValueError):
+        _fresh(run_cfg, scenario="blockfade",
+               topology=EdgeCloudTopology(placement="kmeans"))
+
+
+def test_placement_validation_and_digest(fcfg):
+    with pytest.raises(ValueError):
+        EdgeCloudTopology(placement="steiner")
+    sc = get_scenario("geo-blockfade")
+    ring = EdgeCloudTopology(num_edges=2, placement="ring")
+    km = EdgeCloudTopology(num_edges=2, placement="kmeans")
+    assert ring.digest(fcfg, sc, 0) != km.digest(fcfg, sc, 0)
+
+
+# ---------------------------------------------------------------------------
+# Queueing backhaul (shared metro FIFO / processor sharing) + downlink
+# ---------------------------------------------------------------------------
+
+
+def test_backhaul_model_validation():
+    with pytest.raises(ValueError):
+        EdgeCloudTopology(backhaul_model="token-ring")
+
+
+@pytest.mark.parametrize("model", ["fifo", "ps"])
+def test_queued_backhaul_composes_nonnegative_hops(fcfg, model):
+    """fifo/ps replace the serial pipe: per-client hops are their own
+    wait+service in the SHARED metro queue — non-negative, and the composed
+    total is wireless + hop exactly."""
+    from repro.core import resource_alloc as ra
+
+    sc = get_scenario("geo-blockfade")
+    net0 = sc.initial_network(fcfg, seed=0)
+    for cls in (EdgeCloudTopology, EdgeAggTopology, RelayTopology):
+        topo = cls(num_edges=2, backhaul_model=model, backhaul_bps=2e6)
+        net, assign = topo.localize(fcfg, net0)
+        alloc = topo.allocate(
+            fcfg, net, assign,
+            lambda f, n, **kw: ra.optimize(f, n, strategy="EB", **kw),
+            strategy="EB", eta_search="coarse")
+        t = topo.round_timing(fcfg, net, alloc, 0.5, assign)
+        assert np.all(np.asarray(t.backhaul) >= -1e-9)
+        wireless = fedsllm.simulate_round_time(fcfg, net, alloc, 0.5)
+        np.testing.assert_allclose(t.total, wireless.total + t.backhaul)
+
+
+def test_fifo_backhaul_contends_across_cells(fcfg):
+    """Two cells' bursts share ONE metro pipe: tightening the capacity
+    must grow someone's queueing wait beyond their own service time —
+    contention the serial per-cell pipe cannot represent."""
+    sc = get_scenario("geo-blockfade")
+    net0 = sc.initial_network(fcfg, seed=0)
+    topo = EdgeCloudTopology(num_edges=2, backhaul_model="fifo",
+                             backhaul_bps=1e3)  # deliberately tight
+    net, assign = topo.localize(fcfg, net0)
+    totals = np.linspace(1.0, 1.01, fcfg.num_clients)  # near-simultaneous
+    hop = topo._queued_backhaul(fcfg, assign, 0.5, totals)
+    service = fcfg.s_c_bits / 1e3
+    assert float(np.max(hop)) > 1.5 * service  # someone queued behind others
+
+
+def test_serial_backhaul_stays_default_and_bit_identical(fcfg):
+    sc = get_scenario("geo-blockfade")
+    net0 = sc.initial_network(fcfg, seed=0)
+    default = EdgeCloudTopology(num_edges=2)
+    assert default.backhaul_model == "serial" and default.downlink_bps == 0.0
+    net, assign = default.localize(fcfg, net0)
+    legacy = (default._cell_bits(fcfg, assign, 0.5)
+              / default.backhaul_bps)[assign]
+    np.testing.assert_array_equal(
+        default.backhaul_seconds(fcfg, assign, 0.5), legacy)
+
+
+def test_downlink_broadcast_adds_one_multicast_per_cell(fcfg):
+    """downlink_bps > 0 adds ONE broadcast cost — identical for every
+    member of a cell — on top of the otherwise-unchanged composition."""
+    from repro.core import resource_alloc as ra
+
+    sc = get_scenario("geo-blockfade")
+    net0 = sc.initial_network(fcfg, seed=0)
+    base = EdgeCloudTopology(num_edges=2)
+    dl = EdgeCloudTopology(num_edges=2, downlink_bps=1e6)
+    net, assign = base.localize(fcfg, net0)
+    alloc = ra.optimize(fcfg, net, strategy="EB")
+    t_base = base.round_timing(fcfg, net, alloc, 0.5, assign)
+    t_dl = dl.round_timing(fcfg, net, alloc, 0.5, assign)
+    cost = fcfg.s_c_bits / 1e6
+    assert t_base.downlink is None
+    np.testing.assert_allclose(t_dl.downlink, cost)
+    np.testing.assert_allclose(np.asarray(t_dl.total),
+                               np.asarray(t_base.total) + cost)
