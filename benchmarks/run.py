@@ -172,6 +172,21 @@ def bench_campaign():
          f"traces={exp2.trace_count}_eta_buckets={buckets}_"
          f"scenario=geo-blockfade_sim={res2.total_time:.1f}s")
 
+    # SCAFFOLD carries (K, …) control variates through the same jitted round
+    # (value-only gather/scatter): the derived number is its per-round cost
+    # relative to the gd campaign above, and the trace count must stay 1
+    exp3 = Experiment.from_config(run_cfg, eta=0.5, cut=1, allocator="EB",
+                                  local_algo="scaffold")
+    exp3.run(num_rounds=1, stream=stream, cohort=4, deadline=deadline)  # compile
+    t0 = time.perf_counter()
+    res3 = exp3.run(num_rounds=3, stream=stream, cohort=4, deadline=deadline,
+                    resample_channel=True)
+    jax.block_until_ready(res3.state.lora_c)
+    us3 = (time.perf_counter() - t0) / res3.num_rounds * 1e6
+    assert exp3.trace_count == 1, exp3.trace_count
+    emit("campaign_scaffold", us3,
+         f"overhead_vs_gd={100.0 * (us3 / us - 1.0):+.1f}%_traces=1")
+
 
 def bench_des():
     """Event-driven schedules: a pipelined-schedule campaign vs sync.

@@ -19,6 +19,8 @@
         --topology edge-cloud --scenario geo-blockfade
     PYTHONPATH=src python examples/fedsllm_end_to_end.py \
         --schedule pipelined          # or: async / semi-async (no barrier)
+    PYTHONPATH=src python examples/fedsllm_end_to_end.py \
+        --local-algo scaffold --workload dirichlet   # drift-corrected non-IID
 """
 
 import argparse
@@ -26,8 +28,9 @@ import time
 
 import numpy as np
 
-from repro.api import (Experiment, allocators, get_schedule, get_scenario,
-                       get_topology, scenarios, schedules, topologies)
+from repro.api import (Experiment, allocators, get_local_algo, get_schedule,
+                       get_scenario, get_topology, get_workload, local_algos,
+                       scenarios, schedules, topologies, workloads)
 from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
                           get_arch, smoke_variant)
 from repro.data.tokens import TokenStream
@@ -49,11 +52,20 @@ def main():
                          f"pipelined overlaps client/server microbatches, "
                          f"async/semi-async drop the round barrier and "
                          f"aggregate arrivals staleness-weighted")
+    ap.add_argument("--local-algo", default="gd",
+                    help=f"client local-update rule, one of "
+                         f"{local_algos.names()}; fedprox/scaffold correct "
+                         f"for client drift under non-IID workloads")
+    ap.add_argument("--workload", default="iid",
+                    help=f"per-client data distribution, one of "
+                         f"{workloads.names()}")
     args = ap.parse_args()
     # unknown names fail fast with the knowns listed, like every registry
     scenario = get_scenario(args.scenario)
     topology = get_topology(args.topology)
     schedule = get_schedule(args.schedule)
+    local_algo = get_local_algo(args.local_algo)
+    workload = get_workload(args.workload)
 
     # --- model: LoRA-adapted small LM, split at A_min of the depth ---------
     cfg = smoke_variant(get_arch("fedsllm-100m")).replace(lora=LoRAConfig(rank=4))
@@ -80,7 +92,8 @@ def main():
     run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"], fedsllm=fcfg)
     exp = Experiment.from_config(run_cfg, allocator="proposed", net=net,
                                  alloc=best, scenario=scenario,
-                                 topology=topology, schedule=schedule)
+                                 topology=topology, schedule=schedule,
+                                 local_algo=local_algo, workload=workload)
     print(exp.describe())
     deadline = float(np.quantile(exp.timing.total, 0.8))  # cuts slowest ~20%
 

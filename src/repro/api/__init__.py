@@ -15,7 +15,7 @@ every launcher, example and benchmark used to re-wire by hand:
                    cohort=8, deadline=5.0)         # fading + cohorts + stragglers
     camp.history("loss_round_start"), camp.total_time
 
-Four pluggable strategy axes, each a named registry (mirroring
+Seven pluggable strategy axes, each a named registry (mirroring
 ``config.register_arch`` — unknown names raise ``KeyError`` listing the
 known ones):
 
@@ -45,10 +45,22 @@ known ones):
                    ``async`` | ``semi-async`` (no round barrier — clients
                    rejoin on completion, arrivals aggregate
                    staleness-weighted; ``repro.des.schedules``)
+  ``local_algos``  the client local-update rule on problem (4): ``gd``
+                   (default, the paper's plain descent, bit-identical) |
+                   ``fedprox`` (proximal pull to the broadcast state) |
+                   ``scaffold`` (control-variate-corrected steps with
+                   per-client variates carried across rounds and
+                   checkpointed; ``repro.fl.local_algos``)
+
+Data heterogeneity is a first-class *workload* on the same footing
+(``repro.fl.workloads``): ``iid`` (default, the legacy stream semantics) |
+``quantity-skew`` | ``length-skew`` | ``dirichlet`` domain skew — the
+non-IID client-drift regimes where the local algorithms (and aggregators,
+schedules) actually separate.
 
 ``Experiment.sweep`` fans a grid of topologies × scenarios × allocators ×
-schedules into one tidy records table (``repro.sim.sweep``) for
-cross-family comparisons.
+schedules × local algorithms × workloads into one tidy records table
+(``repro.sim.sweep``) for cross-family comparisons.
 """
 
 from repro.api.aggregators import aggregators, get_aggregator
@@ -56,6 +68,8 @@ from repro.api.allocators import allocators, get_allocator
 from repro.api.compressors import Compressor, compressors, get_compressor
 from repro.api.experiment import Experiment, RoundResult
 from repro.des.schedules import Schedule, get_schedule, schedules
+from repro.fl.local_algos import LocalAlgo, get_local_algo, local_algos
+from repro.fl.workloads import Workload, get_workload, workloads
 from repro.net.topology import Topology, get_topology, topologies
 from repro.registry import Registry
 from repro.sim.campaign import CampaignResult, RoundRecord
@@ -72,4 +86,6 @@ __all__ = [
     "scenarios", "get_scenario", "Scenario",
     "topologies", "get_topology", "Topology",
     "schedules", "get_schedule", "Schedule",
+    "local_algos", "get_local_algo", "LocalAlgo",
+    "workloads", "get_workload", "Workload",
 ]

@@ -35,6 +35,8 @@ from repro.core import fedsllm
 from repro.core.fedsllm import FedsLLMState, RoundTiming
 from repro.core.resource_alloc import Allocation, quantize_eta
 from repro.des.schedules import Schedule, get_schedule
+from repro.fl.local_algos import LocalAlgo, get_local_algo
+from repro.fl.workloads import Workload, get_workload
 from repro.net.topology import Topology, get_topology
 
 
@@ -69,6 +71,8 @@ class Experiment:
                  scenario: Union[str, "Scenario"] = "blockfade",
                  topology: Union[str, Topology] = "star",
                  schedule: Union[str, Schedule] = "sync",
+                 local_algo: Union[str, LocalAlgo] = "gd",
+                 workload: Union[str, Workload] = "iid",
                  seed: int = 0, remat: bool = False, dp_clip: float = 0.0,
                  dp_noise: float = 0.0, eta_search: str = "coarse",
                  lora_rank: int = 8, key: Optional[jax.Array] = None,
@@ -104,6 +108,16 @@ class Experiment:
         # the async family re-order — which client states feed aggregation,
         # all through value-only round-function arguments)
         self.schedule = get_schedule(schedule)
+        # the local algorithm decides the client's inner update rule on
+        # problem (4) (7th axis; ``gd`` is the paper's plain descent and
+        # bit-identical to the pre-registry engine; ``fedprox``/``scaffold``
+        # correct for client drift — the stateful scaffold variates live on
+        # ``self.algo_state`` and ride the round function as value-only
+        # arguments), and the workload decides what data each simulated
+        # client sees (``iid`` is the legacy stream; the skew families are
+        # the non-IID regimes the correctives exist for)
+        self.local_algo = get_local_algo(local_algo)
+        self.workload = get_workload(workload)
         # campaign engine re-solves (reallocate=True) with the same strategy
         self._allocate = allocate
         self._eta_search = eta_search
@@ -155,7 +169,13 @@ class Experiment:
             remat=remat, dp_clip=dp_clip, dp_noise=dp_noise,
             aggregator=aggregate,
             compressor=(None if compressor == "none" else self.compressor),
-            dp_seed=seed, two_tier=self.topology.two_tier)
+            dp_seed=seed, two_tier=self.topology.two_tier,
+            local_algo=self.local_algo)
+        # stateful local algorithms (scaffold) carry per-client round-fn
+        # state across rounds: (K, …)-stacked variates shaped like the
+        # global LoRA pair, advanced by run_round, checkpointed by campaigns
+        self.algo_state = self.local_algo.init_variates(
+            (self.state.lora_c, self.state.lora_s), self.fcfg.num_clients)
         # per-η cache: η is trace-affecting (Lemma 2's local-iteration count
         # is a scan length), so joint per-round reallocation would recompile
         # every round without it.  trace_count sums traces across ALL cached
@@ -184,6 +204,12 @@ class Experiment:
         (``repro.des.schedules``): ``sync`` (the round-synchronous default,
         bit-identical to the pre-schedule engine) | ``pipelined`` |
         ``async`` | ``semi-async``.
+        ``local_algo=`` selects the client local-update rule
+        (``repro.fl.local_algos``): ``gd`` (the paper's plain descent,
+        bit-identical to the pre-registry engine) | ``fedprox`` |
+        ``scaffold``; ``workload=`` the per-client data distribution
+        (``repro.fl.workloads``): ``iid`` (the legacy stream semantics) |
+        ``quantity-skew`` | ``length-skew`` | ``dirichlet``.
         ``run_cfg.shape`` is *not* consumed here: batch geometry comes from
         the ``batches`` pytree handed to :meth:`run_round` (shape configs
         drive the data-stream construction at call sites).  Keyword
@@ -214,11 +240,19 @@ class Experiment:
 
             # trace-counting wrapper: bumps only when jit (re)traces, so
             # campaigns can assert they never recompile across rounds
-            def _counted_round_fn(state, batches, mask, key, weights,
-                                  assign=None, update_scale=None):
-                self._traces += 1
-                return raw(state, batches, mask, key, weights, assign,
-                           update_scale)
+            if self.local_algo.stateful:
+                def _counted_round_fn(state, batches, mask, key, weights,
+                                      assign=None, update_scale=None,
+                                      algo_state=None, algo_ids=None):
+                    self._traces += 1
+                    return raw(state, batches, mask, key, weights, assign,
+                               update_scale, algo_state, algo_ids)
+            else:
+                def _counted_round_fn(state, batches, mask, key, weights,
+                                      assign=None, update_scale=None):
+                    self._traces += 1
+                    return raw(state, batches, mask, key, weights, assign,
+                               update_scale)
 
             fn = jax.jit(_counted_round_fn)
             self._round_fns[key] = fn
@@ -334,8 +368,16 @@ class Experiment:
                 np.eye(M, dtype=np.float32)[np.asarray(self.assign)[ids]])
         scale = (None if update_scale is None
                  else jnp.asarray(update_scale, jnp.float32))
-        self.state, metrics = self._round_fn(self.state, batches, mask, key,
-                                             weights, assign, scale)
+        if self.local_algo.stateful:
+            # cohort→population row map for the variates: value-only, so
+            # elastic cohorts reuse the same trace
+            algo_ids = jnp.asarray(ids, jnp.int32)
+            self.state, metrics, self.algo_state = self._round_fn(
+                self.state, batches, mask, key, weights, assign, scale,
+                self.algo_state, algo_ids)
+        else:
+            self.state, metrics = self._round_fn(self.state, batches, mask,
+                                                 key, weights, assign, scale)
         return RoundResult(self.state, metrics, self.timing)
 
     def run(self, num_rounds: Optional[int] = None, **kwargs) -> "CampaignResult":
@@ -389,5 +431,6 @@ class Experiment:
                 f"agg={self.aggregator_name} alloc={self.allocator_name} "
                 f"codec={self.compressor_name} scenario={self.scenario.name} "
                 f"topo={self.topology.name} sched={self.schedule.name} "
+                f"algo={self.local_algo.name} workload={self.workload.name} "
                 f"T*={self.alloc.T:.1f}s η*={self.alloc.eta:.2f} "
                 f"round={float(np.max(self.timing.total)):.2f}s")

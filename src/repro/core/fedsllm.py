@@ -56,7 +56,9 @@ def init_state(cfg: ModelConfig, cut: int, key=None) -> tuple[FedsLLMState, Any]
 
 
 def local_iteration_count(fcfg: FedsLLMConfig, eta: float) -> int:
-    return max(1, int(math.ceil(dm.lemma_v(fcfg) * math.log2(1.0 / eta))))
+    # Lemma 2 lives in delay_model.local_iters (the allocator prices the
+    # same count); this is the ⌈·⌉-with-floor the training scan uses
+    return max(1, int(math.ceil(dm.local_iters(fcfg, eta))))
 
 
 def global_round_count(fcfg: FedsLLMConfig, eta: float) -> int:
@@ -68,7 +70,7 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
                    remat: bool = False, dp_clip: float = 0.0,
                    dp_noise: float = 0.0, aggregator: Optional[Callable] = None,
                    compressor=None, dp_seed: int = 0,
-                   two_tier: bool = False) -> Callable:
+                   two_tier: bool = False, local_algo=None) -> Callable:
     """Build the jittable global-round function (the `repro.api` engine).
 
     round_fn(state, batches, mask=None, key=None, weights=None, assign=None)
@@ -103,11 +105,31 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
     arrival any per-client discount cancels.  Pass a jnp scalar (value-only
     — one jit trace per campaign); ``None`` keeps the exact legacy
     arithmetic (α = 1).
+
+    local_algo: the client local-update rule (``repro.fl.local_algos``
+    name or instance); None/"gd" keeps the paper's plain GD on problem (4)
+    bit-identically.  For a *stateful* algorithm (``scaffold``) the round
+    function gains two trailing value-only arguments and returns a triple:
+
+        round_fn(state, batches, mask, key, weights, assign, update_scale,
+                 algo_state, algo_ids) -> (state', metrics, algo_state')
+
+    ``algo_state``: the full-population ``(K, …)``-stacked control variates
+    (carried across rounds by the caller); ``algo_ids``: (C,) int array
+    mapping the cohort rows of ``batches`` onto population rows of
+    ``algo_state`` (None = first C users).  Both are value-only — cohort
+    gather/scatter happens inside the trace, so one jit trace per η bucket
+    still covers elastic cohorts.  Variates update from the *raw* local
+    deviations, before any DP clip/noise (the server-side c̄ needs the
+    client's true trajectory; DP applies to the uplink, not local state).
     """
+    from repro.fl.local_algos import get_local_algo
+
     xi = fcfg.xi if xi is None else xi
     delta = fcfg.delta if delta is None else delta
     I_loc = local_iteration_count(fcfg, eta)
     aggregate = federated.fedavg if aggregator is None else aggregator
+    algo = get_local_algo("gd" if local_algo is None else local_algo)
 
     def client_grads(base, lc, ls, batch):
         loss, dc, ds, _ = split.split_value_and_grad(base, lc, ls, batch, cfg, cut,
@@ -115,8 +137,15 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
                                                      compressor=compressor)
         return loss, (dc, ds)
 
-    def one_client_round(base, lc0, ls0, gk0, gbar, batch):
-        """Local GD on problem (4) for one client; returns (h_c, h_s, loss)."""
+    def one_client_round(base, lc0, ls0, gk0, gbar, batch, ctrl=None,
+                         ctrl_bar=None):
+        """Local update on problem (4) for one client → (h_c, h_s, loss).
+
+        The step rule is the selected local algorithm's: plain GD (eq. 9),
+        FedProx's proximal pull, or SCAFFOLD's variate-corrected step
+        (``ctrl``/``ctrl_bar`` carry this client's control variate and the
+        population mean — None for stateless algorithms).
+        """
 
         def grad_G(h):
             hc, hs = h
@@ -132,14 +161,15 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
 
         def body(h, _):
             loss, g = grad_G(h)
+            g = algo.correct(g, h, ctrl, ctrl_bar)
             h = jax.tree.map(lambda x, gx: x - delta * gx, h, g)
             return h, loss
 
         h, losses = jax.lax.scan(body, h0, None, length=I_loc)
         return h[0], h[1], losses[-1]
 
-    def round_fn(state: FedsLLMState, batches, mask=None, key=None,
-                 weights=None, assign=None, update_scale=None):
+    def _round(state: FedsLLMState, batches, mask, key, weights, assign,
+               update_scale, algo_state, algo_ids):
         K = jax.tree.leaves(batches)[0].shape[0]
         if two_tier and assign is not None:
             # hierarchical fed-server role: per-edge then cross-edge
@@ -156,10 +186,36 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
         gbar = (agg(g0[0]), agg(g0[1]))
 
         # 3. local iterations (vmapped over clients)
-        h_c, h_s, last_loss = jax.vmap(
-            lambda gk_c, gk_s, b: one_client_round(state.base, state.lora_c,
-                                                   state.lora_s, (gk_c, gk_s), gbar, b)
-        )(g0[0], g0[1], batches)
+        new_algo_state = algo_state
+        if algo.stateful:
+            if algo_state is None:
+                raise ValueError(
+                    f"local algo {algo.name!r} is stateful: pass algo_state= "
+                    f"(the (K, …)-stacked control variates)")
+            # c̄ over the full stored population; cohort rows gathered by
+            # algo_ids — value-only, so elastic cohorts keep one trace
+            ctrl_bar = jax.tree.map(lambda x: jnp.mean(x, axis=0), algo_state)
+            ids = (jnp.arange(K, dtype=jnp.int32) if algo_ids is None
+                   else algo_ids)
+            ctrl = jax.tree.map(lambda x: x[ids], algo_state)
+            h_c, h_s, last_loss = jax.vmap(
+                lambda gk_c, gk_s, b, ck: one_client_round(
+                    state.base, state.lora_c, state.lora_s, (gk_c, gk_s),
+                    gbar, b, ctrl=ck, ctrl_bar=ctrl_bar)
+            )(g0[0], g0[1], batches, ctrl)
+            # variates advance on the RAW deviations (pre-DP); stragglers
+            # keep theirs (the algo masks), then scatter back to the
+            # population rows
+            upd = algo.update_variates(ctrl, ctrl_bar, (h_c, h_s), mask,
+                                       I_loc, delta)
+            new_algo_state = jax.tree.map(
+                lambda full, u: full.at[ids].set(u.astype(full.dtype)),
+                algo_state, upd)
+        else:
+            h_c, h_s, last_loss = jax.vmap(
+                lambda gk_c, gk_s, b: one_client_round(state.base, state.lora_c,
+                                                       state.lora_s, (gk_c, gk_s), gbar, b)
+            )(g0[0], g0[1], batches)
 
         # 3b. optional DP on the uploaded client updates
         if dp_clip > 0.0:
@@ -184,8 +240,27 @@ def build_round_fn(cfg: ModelConfig, fcfg: FedsLLMConfig, cut: int, eta: float,
             # applies directly to the stacked (K, ...) updates
             "h_c_norm": lora_lib.delta_norm(h_c),
         }
-        return FedsLLMState(state.base, new_lc, new_ls, state.round + 1), metrics
+        new_state = FedsLLMState(state.base, new_lc, new_ls, state.round + 1)
+        return new_state, metrics, new_algo_state
 
+    # stateless algorithms keep the legacy signature and 2-tuple return
+    # (the Python-level branch leaves the traced computation — and for
+    # ``gd`` the jaxpr itself — bit-identical to the pre-registry engine);
+    # stateful ones thread the variates through two extra value-only args
+    if algo.stateful:
+        def round_fn(state: FedsLLMState, batches, mask=None, key=None,
+                     weights=None, assign=None, update_scale=None,
+                     algo_state=None, algo_ids=None):
+            return _round(state, batches, mask, key, weights, assign,
+                          update_scale, algo_state, algo_ids)
+    else:
+        def round_fn(state: FedsLLMState, batches, mask=None, key=None,
+                     weights=None, assign=None, update_scale=None):
+            new_state, metrics, _ = _round(state, batches, mask, key, weights,
+                                           assign, update_scale, None, None)
+            return new_state, metrics
+
+    round_fn.local_algo = algo
     return round_fn
 
 

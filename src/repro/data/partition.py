@@ -27,5 +27,9 @@ def dirichlet_partition(labels: np.ndarray, num_clients: int, alpha: float = 0.5
                 b.extend(part.tolist())
         sizes = [len(b) for b in buckets]
         if min(sizes) >= min_size:
-            break
-    return [np.sort(np.array(b, dtype=np.int64)) for b in buckets]
+            return [np.sort(np.array(b, dtype=np.int64)) for b in buckets]
+    raise ValueError(
+        f"dirichlet_partition could not give every one of {num_clients} "
+        f"clients >= {min_size} samples in 100 draws (alpha={alpha}, "
+        f"n={len(labels)}; last draw's sizes: {sizes}) — lower min_size, "
+        f"raise alpha, or provide more samples")

@@ -1,0 +1,16 @@
+"""Federated-learning strategy axes beyond the paper's Algorithm 1.
+
+``repro.fl`` holds the two client-side axes the FedsLLM paper fixes but
+heterogeneous deployments vary: the *local-update algorithm* (the 7th name
+registry — ``gd`` / ``fedprox`` / ``scaffold``) and the *data workload*
+(``iid`` / ``quantity-skew`` / ``length-skew`` / ``dirichlet``).  Both plug
+into :class:`repro.api.Experiment` by name::
+
+    exp = Experiment.from_config(run_cfg, local_algo="fedprox",
+                                 workload="dirichlet")
+"""
+
+from repro.fl.local_algos import (LocalAlgo, get_local_algo,  # noqa: F401
+                                  local_algos)
+from repro.fl.workloads import (Workload, get_workload,  # noqa: F401
+                                workloads)

@@ -1,0 +1,179 @@
+"""Local-update algorithms — the 7th pluggable strategy axis (``local_algos``).
+
+The paper's Algorithm 1 fixes the client step to plain gradient descent on
+problem (4).  Under IID synthetic tokens that is also the *right* step — but
+the heterogeneous regimes the other six axes exist for (FedLLM-Bench-style
+quantity/length/domain skew; see :mod:`repro.fl.workloads`) introduce client
+drift, and the federated-optimization literature's standard correctives for
+drift are drop-in modifications of exactly that inner step:
+
+  ``gd``        the paper's plain GD on problem (4) — the default, and
+                bit-identical to the pre-registry trajectories (tests pin
+                this: ``correct`` is the identity, so the jaxpr is unchanged)
+  ``fedprox``   FedProx (Li et al., MLSys'20): adds the proximal term
+                (μ/2)‖h‖² against the broadcast global LoRA state, i.e. the
+                corrected gradient is ∇G + μ·h.  Since ``h`` *is* the local
+                deviation from the broadcast (Δw + h), no extra round-state
+                is needed; μ = 0 recovers ``gd`` exactly.
+  ``scaffold``  SCAFFOLD (Karimireddy et al., ICML'20) option II: every local
+                step is corrected by control variates, ∇G − c_k + c̄, and the
+                per-client variates c_k are updated after the round's I_loc
+                steps as c_k⁺ = c_k − c̄ − h/(I_loc·δ) (the client's mean
+                corrected gradient).  The (K, …) variates are *round-function
+                state*: they ride through the jitted round as value-only
+                arguments (like mask/weights/assign), are carried across
+                campaign rounds on the Experiment, and are checkpointed.
+
+An algorithm decides two things inside the jitted round: how the
+problem-(4) gradient is transformed before the δ step (:meth:`correct`) and
+— when ``stateful`` — how its per-client variates evolve after the local
+scan (:meth:`update_variates`).  Both are pure pytree maps, so every
+algorithm keeps the single-trace-per-η-bucket contract (``trace_count``
+bounds are asserted in ``tests/test_fl.py`` like they are for masks).
+
+    exp = Experiment.from_config(run_cfg, local_algo="scaffold",
+                                 workload="dirichlet")
+
+Unknown names raise ``KeyError`` listing the knowns, like every registry.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.registry import Registry
+
+local_algos: Registry = Registry("local_algo")
+
+
+class LocalAlgo:
+    """Strategy protocol for the client's local-update rule.
+
+    ``correct(g, h, ctrl, ctrl_bar)`` transforms the problem-(4) gradient
+    ``g`` (a ``(h_c, h_s)``-shaped pytree) before the ``h ← h − δ·g`` step;
+    ``h`` is the current local deviation, ``ctrl``/``ctrl_bar`` the client's
+    control variate and the population mean (both None for stateless
+    algorithms).  It runs *inside* the jitted scan body, so it must be a
+    pure jnp/pytree computation.
+
+    ``stateful`` algorithms additionally carry per-client variates: a
+    ``(K, …)``-stacked pytree shaped like the LoRA adapters, initialised by
+    :meth:`init_variates` and advanced once per round by
+    :meth:`update_variates` (masked clients must keep their old variates —
+    a straggler that missed the round learned nothing).
+
+    ``params()`` feeds the campaign checkpoint identity (resume refuses a
+    checkpoint written under a different algorithm or hyper-parameters),
+    exactly like ``Schedule.params()``.
+    """
+
+    name = "base"
+    stateful = False
+
+    def params(self) -> dict:
+        return {}
+
+    def correct(self, g, h, ctrl, ctrl_bar):
+        """Transformed gradient for the ``h ← h − δ·(·)`` local step."""
+        return g
+
+    def init_variates(self, template, num_clients: int):
+        """Fresh per-client variates: ``(num_clients, …)`` stacked like
+        ``template`` (the global LoRA pytree), or None when stateless."""
+        return None
+
+    def update_variates(self, variates, ctrl_bar, h, mask, I_loc: int,
+                        delta: float):
+        """Post-round variate update on the cohort slice (value-only)."""
+        return variates
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        kv = ", ".join(f"{k}={v!r}" for k, v in sorted(self.params().items()))
+        return f"{type(self).__name__}({kv})"
+
+
+@local_algos.register("gd")
+class GDLocal(LocalAlgo):
+    """The paper's plain gradient descent on problem (4) (eq. 9)."""
+
+    name = "gd"
+
+
+@local_algos.register("fedprox")
+class FedProxLocal(LocalAlgo):
+    """FedProx: proximal term (μ/2)‖h‖² against the broadcast global state.
+
+    The local objective becomes G_k(h) + (μ/2)‖h‖², so the corrected
+    gradient is ∇G + μ·h — ``h`` is already the deviation from the broadcast
+    Δw, so the proximal pull needs no extra round-function argument.
+    """
+
+    name = "fedprox"
+
+    def __init__(self, mu: float = 0.1):
+        self.mu = float(mu)
+
+    def params(self) -> dict:
+        return {"mu": self.mu}
+
+    def correct(self, g, h, ctrl, ctrl_bar):
+        return jax.tree.map(lambda gx, hx: gx + self.mu * hx, g, h)
+
+
+@local_algos.register("scaffold")
+class ScaffoldLocal(LocalAlgo):
+    """SCAFFOLD: control-variate-corrected local steps (option II).
+
+    Local step:   h ← h − δ·(∇G(h) − c_k + c̄)
+    After I_loc steps (option II, with the local lr δ):
+                  c_k⁺ = c_k − c̄ − h/(I_loc·δ)
+    The server-side c̄ is the mean of the *stored* variates over all K
+    simulated users — equivalent to SCAFFOLD's running server rule
+    c ← c + (|S|/K)·mean_S(Δc_k) because dropped clients keep c_k
+    unchanged.  Variates start at zero, so round 0 is bit-identical to
+    ``gd`` and corrections only appear once clients have drifted apart.
+    """
+
+    name = "scaffold"
+    stateful = True
+
+    def init_variates(self, template, num_clients: int):
+        return jax.tree.map(
+            lambda x: jnp.zeros((num_clients,) + x.shape, x.dtype), template)
+
+    def correct(self, g, h, ctrl, ctrl_bar):
+        return jax.tree.map(lambda gx, ck, cb: gx - ck + cb, g, ctrl, ctrl_bar)
+
+    def update_variates(self, variates, ctrl_bar, h, mask, I_loc: int,
+                        delta: float):
+        inv = 1.0 / (float(I_loc) * float(delta))
+        new = jax.tree.map(lambda ck, cb, hk: ck - cb[None] - inv * hk,
+                           variates, ctrl_bar, h)
+        if mask is None:
+            return new
+        # stragglers keep their old variates: new = m·upd + (1−m)·old
+        def blend(old, upd):
+            m = jnp.reshape(mask, (-1,) + (1,) * (upd.ndim - 1)).astype(upd.dtype)
+            return m * upd + (1.0 - m) * old
+
+        return jax.tree.map(blend, variates, new)
+
+
+def get_local_algo(spec: Union[str, LocalAlgo, type], **kw) -> LocalAlgo:
+    """Resolve a local-algorithm name / class / instance.
+
+    ``get_local_algo("fedprox", mu=0.3)`` → a configured instance;
+    ``get_local_algo(ScaffoldLocal())`` → the object itself.  Unknown names
+    raise ``KeyError`` listing the registered names.
+    """
+    if isinstance(spec, LocalAlgo):
+        if kw:
+            raise TypeError("pass kwargs with a name, not an instance")
+        return spec
+    if isinstance(spec, type) and issubclass(spec, LocalAlgo):
+        return spec(**kw)
+    cls = local_algos.get(spec)
+    return cls(**kw)

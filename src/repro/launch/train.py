@@ -95,7 +95,9 @@ def train_fedsllm(args):
                                  allocator=args.allocator, compressor=args.codec,
                                  scenario=args.scenario,
                                  topology=args.topology,
-                                 schedule=args.schedule)
+                                 schedule=args.schedule,
+                                 local_algo=args.local_algo,
+                                 workload=args.workload)
     print(exp.describe())
 
     stream = TokenStream(args.batch, args.seq, cfg.vocab_size, seed=0)
@@ -172,6 +174,12 @@ def main():
                          "| pipelined | async | semi-async; async runs the "
                          "full population and aggregates arrivals "
                          "staleness-weighted")
+    ap.add_argument("--local-algo", default="gd",
+                    help="client local-update rule (repro.fl.local_algos): "
+                         "gd | fedprox | scaffold")
+    ap.add_argument("--workload", default="iid",
+                    help="per-client data distribution (repro.fl.workloads): "
+                         "iid | quantity-skew | length-skew | dirichlet")
     args = ap.parse_args()
     if args.fedsllm:
         train_fedsllm(args)

@@ -179,8 +179,10 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
           remaining rounds bit-identically (everything is round-indexed).
           Non-campaign checkpoints, and checkpoints from a different
           campaign — seed, η, allocator, scenario name, large-scale-state
-          digest, topology name, attachment digest or execution-schedule
-          mismatch — are refused.
+          digest, topology name, attachment digest, execution-schedule,
+          local-algorithm or workload mismatch — are refused.  Stateful
+          local algorithms (scaffold) checkpoint their control variates
+          with the model, so resume is bit-identical there too.
 
     Execution schedule (``exp.schedule``, the 6th axis): ``sync`` (default)
     keeps every semantics above bit-identical; ``pipelined`` re-times
@@ -205,7 +207,14 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
         fixed_cohort = jax.tree.leaves(batches)[0].shape[0]
         batches_fn = lambda r, ids: batches  # noqa: E731
     elif stream is not None:
-        batches_fn = stream_batcher(stream, K)
+        # the experiment's workload (7th-axis data heterogeneity) decides
+        # what each client reads from the stream; ``iid`` is bit-identical
+        # to the legacy stream_batcher
+        batches_fn = exp.workload.batcher(stream, K)
+    if stream is None and exp.workload.name != "iid":
+        raise ValueError(
+            f"workload {exp.workload.name!r} shapes per-client stream reads: "
+            f"pass stream= (batches=/batches_fn= bypass the workload)")
 
     if cohort is None:
         cohort = K if fixed_cohort is None else fixed_cohort
@@ -254,6 +263,15 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                         # same way scenario/topology params change theirs
                         ("schedule_params",
                          repr(sorted(exp.schedule.params().items()))),
+                        # the local algorithm + workload change the
+                        # trajectory (and scaffold's checkpointed variates)
+                        # the same way schedule params change the timeline
+                        ("local_algo", exp.local_algo.name),
+                        ("local_algo_params",
+                         repr(sorted(exp.local_algo.params().items()))),
+                        ("workload", exp.workload.name),
+                        ("workload_params",
+                         repr(sorted(exp.workload.params().items()))),
                         ("reallocate", reallocate)]
             if not (reallocate and meta.get("reallocate")):
                 # under joint reallocation η is derived per-round state, not
@@ -265,7 +283,15 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                         f"checkpoint in {checkpoint_dir!r} is from a "
                         f"different campaign: {field}={meta[field]!r} vs "
                         f"this run's {current!r}")
-            exp.state = state
+            # stateful local algorithms checkpoint their variates alongside
+            # the model ({"model": ..., "algo_state": ...}); legacy saves
+            # are the bare model pytree
+            if isinstance(state, dict) and "model" in state:
+                exp.state = state["model"]
+                if exp.local_algo.stateful:
+                    exp.algo_state = state["algo_state"]
+            else:
+                exp.state = state
             cumulative = float(meta.get("cumulative_time", 0.0))
             if int(meta["round"]) >= target:
                 stopped_by = "checkpoint"  # restore already covers the ask
@@ -355,7 +381,11 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
 
 def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
           cumulative: float, campaign_seed: int, reallocate: bool) -> None:
-    ckpt.save(rounds_done, exp.state,
+    # stateful local algorithms (scaffold) must resume with the exact
+    # variates the interrupted campaign carried, so they ride the payload
+    payload = (exp.state if exp.algo_state is None
+               else {"model": exp.state, "algo_state": exp.algo_state})
+    ckpt.save(rounds_done, payload,
               {"round": rounds_done, "cumulative_time": cumulative,
                "campaign_seed": campaign_seed, "eta": exp.eta,
                "allocator": exp.allocator_name,
@@ -366,4 +396,8 @@ def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
                                                   campaign_seed),
                "schedule": exp.schedule.name,
                "schedule_params": repr(sorted(exp.schedule.params().items())),
+               "local_algo": exp.local_algo.name,
+               "local_algo_params": repr(sorted(exp.local_algo.params().items())),
+               "workload": exp.workload.name,
+               "workload_params": repr(sorted(exp.workload.params().items())),
                "reallocate": reallocate})

@@ -1,30 +1,37 @@
-"""Topology × scenario × allocator × schedule sweep runner.
+"""Topology × scenario × allocator × schedule × local-algo × workload sweep.
 
 One call fans a grid of network topologies × channel-dynamics scenarios ×
-resource-allocation strategies × execution schedules into identical
-campaigns over the same ``RunConfig``, collecting every round of every cell
-into one tidy long-format records table — the shape the paper's Fig. 2
-comparison wants: the proposed allocator's delay reduction vs the BA
-baseline, reproducible across every scenario family (mobility, device
-tiers, outages, …), per network graph (flat star vs hierarchical
-edge-cloud, …) and now per execution discipline (round-synchronous vs
-pipelined vs asynchronous — ``repro.des.schedules``).
+resource-allocation strategies × execution schedules × local-update
+algorithms × data workloads into identical campaigns over the same
+``RunConfig``, collecting every round of every cell into one tidy
+long-format records table — the shape the paper's Fig. 2 comparison wants:
+the proposed allocator's delay reduction vs the BA baseline, reproducible
+across every scenario family (mobility, device tiers, outages, …), per
+network graph (flat star vs hierarchical edge-cloud, …), per execution
+discipline (round-synchronous vs pipelined vs asynchronous —
+``repro.des.schedules``), and now per client-drift regime: the
+``local_algos`` axis (``gd`` | ``fedprox`` | ``scaffold``) crossed with the
+``workloads`` axis (``iid`` | the skew families) is where the learning-side
+strategies finally separate (``repro.fl``).
 
     res = run_sweep(run_cfg, num_rounds=10, stream=stream,
                     topologies=("star", "edge-cloud"),
                     scenarios=("geo-blockfade", "drift"),
                     allocators=("proposed", "BA"),
-                    schedules=("sync", "pipelined"))
-    res.summary()           # one row per (topo, scenario, alloc, sched) cell
+                    schedules=("sync", "pipelined"),
+                    local_algos=("gd", "fedprox", "scaffold"),
+                    workloads=("iid", "dirichlet"))
+    res.summary()           # one row per grid cell
     res.delay_reduction()   # % delay saved vs BA, per remaining grid axes
     res.schedule_speedup()  # % simulated time saved vs the sync schedule
+    res.local_algo_gain()   # % final-loss reduction vs gd, per cell
     res.to_json("results/SWEEP.json")
 
 Also a CLI (the CI sweep smokes):
 
     PYTHONPATH=src python -m repro.sim.sweep --smoke \
-        --topologies star edge-cloud --scenarios geo-blockfade \
-        --schedules pipelined async --rounds 2 --out results/SWEEP_async.json
+        --local-algos gd fedprox --workloads iid dirichlet \
+        --allocators EB --rounds 2 --out results/SWEEP_local.json
 """
 
 from __future__ import annotations
@@ -32,6 +39,7 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import dataclass, field
+from itertools import product
 from typing import Optional, Sequence
 
 import numpy as np
@@ -40,6 +48,8 @@ DEFAULT_SCENARIOS = ("blockfade", "geo-blockfade")
 DEFAULT_ALLOCATORS = ("proposed", "BA")
 DEFAULT_TOPOLOGIES = ("star",)
 DEFAULT_SCHEDULES = ("sync",)
+DEFAULT_LOCAL_ALGOS = ("gd",)
+DEFAULT_WORKLOADS = ("iid",)
 
 
 @dataclass
@@ -47,71 +57,87 @@ class SweepResult:
     """A finished sweep: long-format per-round records + grid metadata."""
 
     records: list[dict]  # one dict per (topology, scenario, allocator,
-    #                      schedule, round)
+    #                      schedule, local_algo, workload, round)
     scenarios: tuple[str, ...]
     allocators: tuple[str, ...]
     num_rounds: int
     meta: dict = field(default_factory=dict)  # cell-level info (traces, η*…)
     topologies: tuple[str, ...] = DEFAULT_TOPOLOGIES
     schedules: tuple[str, ...] = DEFAULT_SCHEDULES
+    local_algos: tuple[str, ...] = DEFAULT_LOCAL_ALGOS
+    workloads: tuple[str, ...] = DEFAULT_WORKLOADS
+
+    _AXIS_ARG = {"topologies": "topology", "schedules": "schedule",
+                 "local_algos": "local_algo", "workloads": "workload"}
 
     def cell(self, scenario: str, allocator: str,
              topology: Optional[str] = None,
-             schedule: Optional[str] = None) -> list[dict]:
+             schedule: Optional[str] = None,
+             local_algo: Optional[str] = None,
+             workload: Optional[str] = None) -> list[dict]:
         """The per-round records of one grid cell, in round order.
 
-        ``topology``/``schedule`` may be omitted only when the grid has a
-        single entry on that axis (the pre-axis call signatures); on a
-        multi-entry grid an explicit name is required — silently merging
-        graphs or disciplines would hand callers interleaved rounds from
-        different campaigns."""
+        ``topology``/``schedule``/``local_algo``/``workload`` may be omitted
+        only when the grid has a single entry on that axis (the pre-axis
+        call signatures); on a multi-entry grid an explicit name is required
+        — silently merging graphs, disciplines or drift regimes would hand
+        callers interleaved rounds from different campaigns."""
         topology = self._only("topologies", topology)
         schedule = self._only("schedules", schedule)
+        local_algo = self._only("local_algos", local_algo)
+        workload = self._only("workloads", workload)
         return [r for r in self.records
                 if r["scenario"] == scenario and r["allocator"] == allocator
                 and r.get("topology", "star") == topology
-                and r.get("schedule", "sync") == schedule]
+                and r.get("schedule", "sync") == schedule
+                and r.get("local_algo", "gd") == local_algo
+                and r.get("workload", "iid") == workload]
 
     def _only(self, axis: str, value: Optional[str]) -> str:
         entries = getattr(self, axis)
         if value is None:
             if len(entries) > 1:
-                arg = "topology" if axis == "topologies" else "schedule"
+                arg = self._AXIS_ARG[axis]
                 raise ValueError(f"this sweep spans {axis} {entries}; pass "
                                  f"cell(scenario, allocator, {arg}=...)")
             return entries[0]
         return value
 
     def _grid(self):
-        for t in self.topologies:
-            for s in self.scenarios:
-                for a in self.allocators:
-                    for d in self.schedules:
-                        yield t, s, a, d
+        yield from product(self.topologies, self.scenarios, self.allocators,
+                           self.schedules, self.local_algos, self.workloads)
 
-    def _key(self, topology: str, scenario: str, schedule: str) -> str:
+    def _key(self, topology: str, scenario: str, schedule: str,
+             local_algo: str = None, workload: str = None) -> str:
         """Reporting key: scenario, prefixed/suffixed by whichever extra
         axes the grid actually spans (single-axis grids keep the short
         pre-axis keys, e.g. ``"blockfade"`` or ``"star/blockfade"``)."""
         key = scenario if len(self.topologies) == 1 else f"{topology}/{scenario}"
-        return key if len(self.schedules) == 1 else f"{key}/{schedule}"
+        if len(self.schedules) > 1:
+            key = f"{key}/{schedule}"
+        if local_algo is not None and len(self.local_algos) > 1:
+            key = f"{key}/{local_algo}"
+        if workload is not None and len(self.workloads) > 1:
+            key = f"{key}/{workload}"
+        return key
 
     def summary(self) -> list[dict]:
         """One row per cell: simulated campaign time, final loss, stragglers."""
         out = []
-        for t, s, a, d in self._grid():
-            rows = self.cell(s, a, t, d)
+        for t, s, a, d, la, w in self._grid():
+            rows = self.cell(s, a, t, d, la, w)
             if not rows:
                 continue
             slots = sum(r["cohort_size"] for r in rows)
             lost = sum(r["cohort_size"] - r["survivors"] for r in rows)
             out.append({
                 "topology": t, "scenario": s, "allocator": a, "schedule": d,
+                "local_algo": la, "workload": w,
                 "rounds": len(rows),
                 "total_time": rows[-1]["cumulative_time"],
                 "final_loss": rows[-1]["loss_round_start"],
                 "straggler_rate": lost / max(slots, 1),
-                **self.meta.get((t, s, a, d), {}),
+                **self.meta.get((t, s, a, d, la, w), {}),
             })
         return out
 
@@ -123,15 +149,15 @@ class SweepResult:
         and per execution discipline (keys become
         ``"topology/scenario[/schedule]"``)."""
         out = {}
-        for t in self.topologies:
-            for s in self.scenarios:
-                for d in self.schedules:
-                    a = self.cell(s, allocator, t, d)
-                    b = self.cell(s, baseline, t, d)
-                    if a and b and b[-1]["cumulative_time"] > 0:
-                        out[self._key(t, s, d)] = 100.0 * (
-                            1.0 - a[-1]["cumulative_time"]
-                            / b[-1]["cumulative_time"])
+        for t, s, d, la, w in product(self.topologies, self.scenarios,
+                                      self.schedules, self.local_algos,
+                                      self.workloads):
+            a = self.cell(s, allocator, t, d, la, w)
+            b = self.cell(s, baseline, t, d, la, w)
+            if a and b and b[-1]["cumulative_time"] > 0:
+                out[self._key(t, s, d, la, w)] = 100.0 * (
+                    1.0 - a[-1]["cumulative_time"]
+                    / b[-1]["cumulative_time"])
         return out
 
     def schedule_speedup(self, baseline: str = "sync") -> dict[str, float]:
@@ -143,20 +169,56 @@ class SweepResult:
         out = {}
         if baseline not in self.schedules:
             return out
-        for t in self.topologies:
-            for s in self.scenarios:
-                for a in self.allocators:
-                    base = self.cell(s, a, t, baseline)
-                    if not base or base[-1]["cumulative_time"] <= 0:
-                        continue
-                    for d in self.schedules:
-                        if d == baseline:
-                            continue
-                        rows = self.cell(s, a, t, d)
-                        if rows:
-                            out[f"{t}/{s}/{a}/{d}"] = 100.0 * (
-                                1.0 - rows[-1]["cumulative_time"]
-                                / base[-1]["cumulative_time"])
+        for t, s, a, la, w in product(self.topologies, self.scenarios,
+                                      self.allocators, self.local_algos,
+                                      self.workloads):
+            base = self.cell(s, a, t, baseline, la, w)
+            if not base or base[-1]["cumulative_time"] <= 0:
+                continue
+            for d in self.schedules:
+                if d == baseline:
+                    continue
+                rows = self.cell(s, a, t, d, la, w)
+                if rows:
+                    key = f"{t}/{s}/{a}/{d}"
+                    if len(self.local_algos) > 1:
+                        key = f"{key}/{la}"
+                    if len(self.workloads) > 1:
+                        key = f"{key}/{w}"
+                    out[key] = 100.0 * (
+                        1.0 - rows[-1]["cumulative_time"]
+                        / base[-1]["cumulative_time"])
+        return out
+
+    def local_algo_gain(self, baseline: str = "gd") -> dict[str, float]:
+        """% final-loss reduction of each non-baseline local algorithm vs
+        ``baseline`` on the same (topology, scenario, allocator, schedule,
+        workload) cell — positive means the drift-corrected algorithm ended
+        the campaign at a lower global loss.  The final loss is the last
+        round's ``loss_round_start`` (the global model after every previous
+        aggregation), the same convention as ``summary()``.  Keys are
+        ``"scenario[/…]/workload/local_algo"``; requires the baseline
+        algorithm in the grid."""
+        out = {}
+        if baseline not in self.local_algos:
+            return out
+        for t, s, a, d, w in product(self.topologies, self.scenarios,
+                                     self.allocators, self.schedules,
+                                     self.workloads):
+            base = self.cell(s, a, t, d, baseline, w)
+            if not base or base[-1]["loss_round_start"] <= 0:
+                continue
+            for la in self.local_algos:
+                if la == baseline:
+                    continue
+                rows = self.cell(s, a, t, d, la, w)
+                if rows:
+                    key = f"{self._key(t, s, d)}/{w}/{la}"
+                    if len(self.allocators) > 1:
+                        key = f"{a}:{key}"
+                    out[key] = 100.0 * (
+                        1.0 - rows[-1]["loss_round_start"]
+                        / base[-1]["loss_round_start"])
         return out
 
     def to_json(self, path: str) -> str:
@@ -174,12 +236,16 @@ class SweepResult:
             "scenarios": list(self.scenarios),
             "allocators": list(self.allocators),
             "schedules": list(self.schedules),
+            "local_algos": list(self.local_algos),
+            "workloads": list(self.workloads),
             "num_rounds": self.num_rounds,
             "records": self.records,
             "summary": self.summary(),
             "delay_reduction": reduction,
             "schedule_speedup_pct": (self.schedule_speedup()
                                      if len(self.schedules) >= 2 else None),
+            "local_algo_gain_pct": (self.local_algo_gain()
+                                    if len(self.local_algos) >= 2 else None),
         }
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
@@ -193,11 +259,13 @@ def run_sweep(run_cfg, num_rounds: int, *,
               allocators: Sequence[str] = DEFAULT_ALLOCATORS,
               topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
               schedules: Sequence[str] = DEFAULT_SCHEDULES,
+              local_algos: Sequence[str] = DEFAULT_LOCAL_ALGOS,
+              workloads: Sequence[str] = DEFAULT_WORKLOADS,
               stream=None, batches=None, batches_fn=None,
               exp_overrides: Optional[dict] = None,
               **campaign_kw) -> SweepResult:
     """Run the same campaign through every (topology, scenario, allocator,
-    schedule) cell.
+    schedule, local_algo, workload) cell.
 
     Each cell builds a fresh ``Experiment`` from ``run_cfg`` (so cells are
     independent and individually deterministic — the whole sweep is a pure
@@ -208,45 +276,50 @@ def run_sweep(run_cfg, num_rounds: int, *,
     ``Experiment.run`` (e.g. ``cohort=``, ``deadline=``, ``reallocate=``).
     Non-star topologies need geometry-carrying scenarios in the grid (e.g.
     ``geo-blockfade``/``drift`` — not the legacy ``blockfade``); async
-    schedules run the full population regardless of ``cohort=``.
+    schedules run the full population regardless of ``cohort=``; non-``iid``
+    workloads shape per-client *stream* reads, so they require ``stream=``.
 
     Returns a :class:`SweepResult` whose ``records`` are tidy long-format
     rows — one per round per cell — ready for a dataframe or ``to_json``.
     """
     from repro.api.experiment import Experiment  # deferred: import cycle
 
+    if stream is None and any(w != "iid" for w in workloads):
+        raise ValueError(f"workloads={tuple(workloads)} include non-iid "
+                         f"entries, which require stream= data")
     exp_overrides = dict(exp_overrides or {})
     records: list[dict] = []
     meta: dict = {}
-    for t in topologies:
-        for s in scenarios:
-            for a in allocators:
-                for d in schedules:
-                    exp = Experiment.from_config(run_cfg, scenario=s,
-                                                 allocator=a, topology=t,
-                                                 schedule=d, **exp_overrides)
-                    res = exp.run(num_rounds=num_rounds, stream=stream,
-                                  batches=batches, batches_fn=batches_fn,
-                                  **campaign_kw)
-                    for rec in res.records:
-                        records.append({
-                            "topology": t, "scenario": s, "allocator": a,
-                            "schedule": d,
-                            "round": rec.round,
-                            "eta": rec.eta, "alloc_T": float(rec.alloc.T),
-                            "cohort_size": rec.cohort_size,
-                            "survivors": rec.survivors,
-                            "round_time": rec.round_time,
-                            "cumulative_time": rec.cumulative_time,
-                            **rec.metrics,
-                        })
-                    meta[(t, s, a, d)] = {"trace_count": exp.trace_count,
-                                          "eta_star": float(exp.alloc.eta),
-                                          "eta_buckets": len(exp.eta_buckets)}
+    for t, s, a, d, la, w in product(topologies, scenarios, allocators,
+                                     schedules, local_algos, workloads):
+        exp = Experiment.from_config(run_cfg, scenario=s,
+                                     allocator=a, topology=t,
+                                     schedule=d, local_algo=la,
+                                     workload=w, **exp_overrides)
+        res = exp.run(num_rounds=num_rounds, stream=stream,
+                      batches=batches, batches_fn=batches_fn,
+                      **campaign_kw)
+        for rec in res.records:
+            records.append({
+                "topology": t, "scenario": s, "allocator": a,
+                "schedule": d, "local_algo": la, "workload": w,
+                "round": rec.round,
+                "eta": rec.eta, "alloc_T": float(rec.alloc.T),
+                "cohort_size": rec.cohort_size,
+                "survivors": rec.survivors,
+                "round_time": rec.round_time,
+                "cumulative_time": rec.cumulative_time,
+                **rec.metrics,
+            })
+        meta[(t, s, a, d, la, w)] = {"trace_count": exp.trace_count,
+                                     "eta_star": float(exp.alloc.eta),
+                                     "eta_buckets": len(exp.eta_buckets)}
     return SweepResult(records=records, scenarios=tuple(scenarios),
                        allocators=tuple(allocators), num_rounds=num_rounds,
                        meta=meta, topologies=tuple(topologies),
-                       schedules=tuple(schedules))
+                       schedules=tuple(schedules),
+                       local_algos=tuple(local_algos),
+                       workloads=tuple(workloads))
 
 
 def main(argv: Optional[list[str]] = None) -> None:
@@ -269,6 +342,14 @@ def main(argv: Optional[list[str]] = None) -> None:
     ap.add_argument("--schedules", nargs="+", default=list(DEFAULT_SCHEDULES),
                     help="execution disciplines (repro.des.schedules): "
                          "sync | pipelined | async | semi-async")
+    ap.add_argument("--local-algos", nargs="+",
+                    default=list(DEFAULT_LOCAL_ALGOS),
+                    help="client local-update rules (repro.fl.local_algos): "
+                         "gd | fedprox | scaffold")
+    ap.add_argument("--workloads", nargs="+", default=list(DEFAULT_WORKLOADS),
+                    help="per-client data distributions "
+                         "(repro.fl.workloads): iid | quantity-skew | "
+                         "length-skew | dirichlet")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--cohort", type=int, default=4)
@@ -288,7 +369,8 @@ def main(argv: Optional[list[str]] = None) -> None:
     overrides = {} if args.eta is None else {"eta": args.eta}
     res = run_sweep(run_cfg, args.rounds, scenarios=args.scenarios,
                     allocators=args.allocators, topologies=args.topologies,
-                    schedules=args.schedules, stream=stream,
+                    schedules=args.schedules, local_algos=args.local_algos,
+                    workloads=args.workloads, stream=stream,
                     cohort=args.cohort, reallocate=args.reallocate,
                     exp_overrides=overrides)
     for row in res.summary():
@@ -300,6 +382,8 @@ def main(argv: Optional[list[str]] = None) -> None:
                   f"delay reduction {pct:.2f}%")
     for key, pct in res.schedule_speedup().items():
         print(f"# {key}: simulated time saved vs sync {pct:.2f}%")
+    for key, pct in res.local_algo_gain().items():
+        print(f"# {key}: final-loss reduction vs gd {pct:.2f}%")
     print(f"# wrote {res.to_json(args.out)} ({len(res.records)} records)")
 
 

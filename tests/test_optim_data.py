@@ -117,6 +117,30 @@ def test_dirichlet_partition_skew():
     assert min(len(p) for p in parts) >= 2
 
 
+def test_dirichlet_partition_impossible_min_size_raises():
+    # 4 samples cannot give 8 clients >= 2 each: the failure must be loud
+    # (a ValueError naming the achieved sizes), not a silent short return
+    labels = np.zeros(4, dtype=np.int64)
+    with pytest.raises(ValueError, match="sizes"):
+        dirichlet_partition(labels, 8, alpha=0.5, seed=0, min_size=2)
+
+
+@given(st.integers(2, 8), st.integers(0, 50))
+def test_dirichlet_partition_pure_in_seed(K, seed):
+    """Same seed ⇒ the identical partition (workloads rebuild batchers from
+    (stream.seed, K) and rely on this); different seed ⇒ a different one."""
+    labels = np.repeat(np.arange(4), 24)
+    a = dirichlet_partition(labels, K, alpha=0.5, seed=seed, min_size=1)
+    b = dirichlet_partition(labels, K, alpha=0.5, seed=seed, min_size=1)
+    assert len(a) == len(b) == K
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    allidx = np.sort(np.concatenate(a))
+    np.testing.assert_array_equal(allidx, np.arange(len(labels)))
+    c = dirichlet_partition(labels, K, alpha=0.5, seed=seed + 1, min_size=1)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
 # ---------------------------------------------------------------------------
 # compression
 # ---------------------------------------------------------------------------
