@@ -172,6 +172,34 @@ def bench_campaign():
          f"traces={exp2.trace_count}_eta_buckets={buckets}_"
          f"scenario=geo-blockfade_sim={res2.total_time:.1f}s")
 
+    # joint-η reallocation under a QUEUED backhaul: the edge-cloud fifo
+    # metro link turns on the allocator↔queueing fixed point
+    # (net.allocation.solve_wait_aware) inside every per-round warm
+    # re-solve.  At the default metro capacity the loop early-exits right
+    # after the wait-blind iterate, so this prices the full wiring (per-η
+    # hop evaluation + true-queue pricing) at its steady-state cost — and
+    # the jit cache must stay η-bucket bounded exactly like the serial
+    # reallocating campaign above
+    from repro.net.topology import EdgeCloudTopology
+
+    exp4 = Experiment.from_config(
+        run_cfg, eta=0.2, cut=1, allocator="proposed",
+        scenario="geo-blockfade",
+        topology=EdgeCloudTopology(num_edges=2, backhaul_model="fifo"))
+    exp4.run(num_rounds=1, stream=stream, cohort=4, reallocate=True)  # compile
+    t0 = time.perf_counter()
+    res4 = exp4.run(num_rounds=3, stream=stream, cohort=4, reallocate=True)
+    jax.block_until_ready(res4.state.lora_c)
+    us4 = (time.perf_counter() - t0) / res4.num_rounds * 1e6
+    buckets4 = len(exp4.eta_buckets)
+    assert exp4.trace_count <= buckets4, (exp4.trace_count, buckets4)
+    diag = exp4.topology.wait_diag
+    assert diag and all(d.converged for d in diag), diag
+    emit("campaign_realloc_queued", us4,
+         f"traces={exp4.trace_count}_eta_buckets={buckets4}_"
+         f"topology=edge-cloud+fifo_wait_iters="
+         f"{max(d.iters for d in diag)}_sim={res4.total_time:.1f}s")
+
     # SCAFFOLD carries (K, …) control variates through the same jitted round
     # (value-only gather/scatter): the derived number is its per-round cost
     # relative to the gd campaign above, and the trace count must stay 1

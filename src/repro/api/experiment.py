@@ -145,6 +145,12 @@ class Experiment:
             self.topology.allocate(self.fcfg, self.net, self.assign, allocate,
                                    strategy=allocator, eta_search=ctor_search)
             if alloc is None else alloc)
+        if not self.alloc.feasible:
+            raise ValueError(
+                f"allocator {allocator!r} found no feasible allocation on the "
+                f"constructor network (scenario {self.scenario.name!r}, "
+                f"topology {self.topology.name!r}) — an infeasible Allocation "
+                f"has eta=nan and cannot price an experiment")
         # η* prices the allocation; the training η is clamped so Lemma 2
         # still yields a non-trivial local-iteration count
         self.eta = (min(float(self.alloc.eta), self.fcfg.eta_train_max)
@@ -267,7 +273,15 @@ class Experiment:
         on first use).  Returns the η actually adopted.  This is how
         ``reallocate=True`` campaigns re-solve Lemma 1/2 jointly every round
         while keeping ``trace_count`` ≤ the number of η buckets.
+
+        Non-finite η is rejected loudly: an infeasible Allocation carries
+        ``eta=nan``, and silently adopting a fabricated η would train the
+        campaign on a round the allocator could not actually solve.
         """
+        if not np.isfinite(eta):
+            raise ValueError(
+                f"cannot adopt non-finite eta {eta!r} — an infeasible "
+                f"allocation has no solved η* (see allocation._infeasible)")
         q = quantize_eta(eta, self.fcfg.eta_bucket, self.fcfg.eta_train_max)
         if q != self.eta:
             self.eta = q

@@ -81,11 +81,20 @@ def _best_split(lmbda, R, V, s_c, s, net: dm.Network, iters: int = 32):
 
 
 def _feasibility(T, cfg: FedsLLMConfig, net: dm.Network, eta: float, A: float,
-                 model_params, lam_iters: int = 12):
-    """min over λ of max(Σb_c/B_c, Σb_s/B_s) at latency target T."""
+                 model_params, lam_iters: int = 12, extra_delay=None):
+    """min over λ of max(Σb_c/B_c, Σb_s/B_s) at latency target T.
+
+    ``extra_delay`` is an optional (K,) per-user fixed latency already
+    committed outside the wireless hop (the wait-aware allocator's expected
+    backhaul wait+service): it tightens each user's budget exactly like the
+    compute time does, ``R = T/I0 − τ − extra``.  ``None`` keeps the
+    legacy wireless-only budget bit-identical.
+    """
     I0 = dm.global_rounds(cfg, eta)
     V = dm.local_iters(cfg, eta)
     tau = dm.compute_time(cfg, net, eta, A, model_params)
+    if extra_delay is not None:
+        tau = tau + np.asarray(extra_delay, float)
     R = T / I0 - tau
     if np.any(R <= 0):
         return np.inf, None
@@ -115,21 +124,32 @@ def _feasibility(T, cfg: FedsLLMConfig, net: dm.Network, eta: float, A: float,
 
 def solve_fixed_eta_exact(cfg: FedsLLMConfig, net: dm.Network, eta: float,
                           A: Optional[float] = None, model_params=None,
-                          T_hi: Optional[float] = None, iters: int = 30) -> Allocation:
-    """Bisection on T; inner bandwidth-balancing feasibility (exact)."""
+                          T_hi: Optional[float] = None, iters: int = 30,
+                          extra_delay=None) -> Allocation:
+    """Bisection on T; inner bandwidth-balancing feasibility (exact).
+
+    ``extra_delay`` (optional (K,)) shrinks each user's per-round budget by
+    a fixed latency committed elsewhere on its path — the wait-aware
+    allocator's expected backhaul term; ``None`` is the legacy
+    wireless-only problem, bit-identical.
+    """
     A = cfg.split_ratio_min if A is None else A  # paper: A* = A_min
     I0 = dm.global_rounds(cfg, eta)
     tau = dm.compute_time(cfg, net, eta, A, model_params)
+    if extra_delay is not None:
+        tau = tau + np.asarray(extra_delay, float)
     T_lo = I0 * np.max(tau)
     if T_hi is None:
         eb = solve_equal_bandwidth(cfg, net, eta, A, model_params)
         T_hi = eb.T * 1.001 if np.isfinite(eb.T) else I0 * np.max(tau) * 1e4 + 1e3
     # ensure hi feasible
-    val, alloc = _feasibility(T_hi, cfg, net, eta, A, model_params)
+    val, alloc = _feasibility(T_hi, cfg, net, eta, A, model_params,
+                              extra_delay=extra_delay)
     grow = 0
     while val > 1.0 and grow < 40:
         T_hi *= 2.0
-        val, alloc = _feasibility(T_hi, cfg, net, eta, A, model_params)
+        val, alloc = _feasibility(T_hi, cfg, net, eta, A, model_params,
+                                  extra_delay=extra_delay)
         grow += 1
     if val > 1.0:
         return Allocation(np.inf, eta, A, None, None, None, None, False)
@@ -137,7 +157,8 @@ def solve_fixed_eta_exact(cfg: FedsLLMConfig, net: dm.Network, eta: float,
         if T_hi - T_lo < 1e-5 * T_hi:
             break
         mid = 0.5 * (T_lo + T_hi)
-        val, a = _feasibility(mid, cfg, net, eta, A, model_params)
+        val, a = _feasibility(mid, cfg, net, eta, A, model_params,
+                              extra_delay=extra_delay)
         if val <= 1.0:
             T_hi, alloc = mid, a
         else:
@@ -172,7 +193,8 @@ def solve_equal_bandwidth(cfg: FedsLLMConfig, net: dm.Network, eta: float,
 
 def solve_fixed_eta_scipy(cfg: FedsLLMConfig, net: dm.Network, eta: float,
                           A: Optional[float] = None, model_params=None,
-                          x0: Optional[np.ndarray] = None) -> Allocation:
+                          x0: Optional[np.ndarray] = None,
+                          extra_delay=None) -> Allocation:
     """Problem (17) as stated: vars x = [T, t_c(K), t_s(K), b_c(K), b_s(K)]."""
     from scipy.optimize import NonlinearConstraint, LinearConstraint, minimize
 
@@ -181,6 +203,8 @@ def solve_fixed_eta_scipy(cfg: FedsLLMConfig, net: dm.Network, eta: float,
     I0 = dm.global_rounds(cfg, eta)
     V = dm.local_iters(cfg, eta)
     tau = dm.compute_time(cfg, net, eta, A, model_params)
+    if extra_delay is not None:
+        tau = tau + np.asarray(extra_delay, float)
     s_c, s = cfg.s_c_bits, cfg.s_bits
 
     def unpack(x):
@@ -278,8 +302,14 @@ def eta_refine_grid(cfg: FedsLLMConfig, eta: float) -> np.ndarray:
 def optimize(cfg: FedsLLMConfig, net: dm.Network, strategy: str = "proposed",
              model_params=None, eta_grid: Optional[np.ndarray] = None,
              solver: str = "exact", eta_search: str = "grid",
-             eta0: Optional[float] = None) -> Allocation:
+             eta0: Optional[float] = None,
+             extra_delay: Optional[np.ndarray] = None) -> Allocation:
     """Full optimiser.  strategy ∈ {proposed, EB, FE, BA}.
+
+    ``extra_delay`` — optional (K,) fixed per-user latency committed outside
+    the wireless hop (the wait-aware allocator's expected backhaul
+    wait+service); only the 'proposed' solver responds to it (the EB/FE/BA
+    baselines stay wait-blind by design).
 
     eta_search='grid' is the paper-faithful 0.01-step sweep; 'coarse' runs a
     0.05-step sweep + one 0.01-step local refinement around the argmin
@@ -316,22 +346,25 @@ def optimize(cfg: FedsLLMConfig, net: dm.Network, strategy: str = "proposed",
                 # prune: if the incumbent T* is infeasible at this η, this η
                 # cannot improve on it (T(η) would exceed T*) — one cheap check
                 val, _ = _feasibility(best.T, cfg, net, eta, cfg.split_ratio_min,
-                                      model_params)
+                                      model_params, extra_delay=extra_delay)
                 if val > 1.0:
                     continue
-                a = fn(cfg, net, eta, model_params=model_params, T_hi=best.T * 1.0001)
+                a = fn(cfg, net, eta, model_params=model_params,
+                       T_hi=best.T * 1.0001, extra_delay=extra_delay)
             else:
-                a = fn(cfg, net, eta, model_params=model_params)
+                a = fn(cfg, net, eta, model_params=model_params,
+                       extra_delay=extra_delay)
             if a.feasible and (best is None or a.T < best.T):
                 best = a
         if eta_search == "coarse" and best is not None:
             for eta in eta_refine_grid(cfg, best.eta):
                 eta = float(eta)
                 val, _ = _feasibility(best.T, cfg, net, eta, cfg.split_ratio_min,
-                                      model_params)
+                                      model_params, extra_delay=extra_delay)
                 if val > 1.0:
                     continue
-                a = fn(cfg, net, eta, model_params=model_params, T_hi=best.T * 1.0001)
+                a = fn(cfg, net, eta, model_params=model_params,
+                       T_hi=best.T * 1.0001, extra_delay=extra_delay)
                 if a.feasible and a.T < best.T:
                     best = a
         return dataclasses.replace(best, strategy="proposed")

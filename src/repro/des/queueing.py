@@ -1,11 +1,12 @@
 """Shared-resource service models for the simulated system plane.
 
-The §III/§IV delay model prices every transfer and every compute step in
-isolation: the edge→cloud backhaul is a fixed-capacity serial pipe
-(``repro/net``) and the main-server GPU serves each client at ``f_server``
-regardless of how many are active.  This module adds the two classic
-shared-resource disciplines so contention is modelled instead of assumed
-away:
+The §III/§IV delay model prices every compute step and every *wireless*
+transfer in isolation, and the queued backhaul modes close the loop on the
+edge→cloud leg: with ``backhaul_model="fifo" | "ps"`` the composed path
+re-times through a SHARED metro queue (this module), and the allocator's
+per-cell convex solves fold the matching *expected* wait back into their
+latency budgets (``repro.net.allocation``'s wait-aware fixed point), so
+contention is optimized against instead of assumed away.  The disciplines:
 
   * :func:`fifo` — a single-capacity first-come-first-served queue (the
     metro backhaul: one cell's burst delays the next cell's transfer);
@@ -19,9 +20,10 @@ away:
 All functions are pure numpy on host-side arrays — they plug into the
 topology's per-hop delay composition (``repro/net/topology.py`` with
 ``backhaul_model="fifo" | "ps"``) and into the asynchronous execution
-schedules (``repro.des.schedules``).  :func:`md1_mean_wait` is the textbook
-M/D/1 queueing formula the FIFO model is sanity-checked against in
-``tests/test_des.py``.
+schedules (``repro.des.schedules``).  :func:`md1_mean_wait` and
+:func:`ps_mean_wait` are the textbook M/D/1 and M/G/1-PS queueing formulas
+the simulated disciplines are sanity-checked against in ``tests/test_des.py``
+— and the analytic expected-wait terms the wait-aware allocator prices with.
 """
 
 from __future__ import annotations
@@ -152,3 +154,21 @@ def md1_mean_wait(arrival_rate: float, service_s: float) -> float:
     if rho >= 1.0:
         return np.inf
     return rho * service_s / (2.0 * (1.0 - rho))
+
+
+def ps_mean_wait(arrival_rate: float, service_s: float) -> float:
+    """Analytic M/D/1-PS mean *extra* delay  W = ρ·s / (1−ρ).
+
+    Poisson arrivals at ``arrival_rate`` into a single egalitarian
+    processor-sharing server with service requirement ``service_s``
+    (utilisation ρ = λ·s < 1).  M/G/1-PS mean sojourn is the insensitive
+    s/(1−ρ) — independent of the service distribution, so it holds exactly
+    for the deterministic demands the backhaul carries — and the *wait*
+    (sojourn minus the job's own service) is ρ·s/(1−ρ).  The reference the
+    simulated PS discipline is checked against at low utilisation, and the
+    PS branch of the wait-aware allocator's expected-wait term.
+    """
+    rho = arrival_rate * service_s
+    if rho >= 1.0:
+        return np.inf
+    return rho * service_s / (1.0 - rho)

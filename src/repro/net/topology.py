@@ -184,11 +184,19 @@ class HierTopology(Topology):
     per-round global-model broadcast cost (one multicast per cell,
     ``queueing.broadcast_seconds``); 0 keeps the paper's negligible-downlink
     convention.
+
+    Under a queued backhaul the 'proposed' allocator closes the
+    allocator↔queueing loop (``repro.net.allocation.solve_wait_aware``):
+    ``wait_aware=False`` opts a queued-backhaul graph back into the legacy
+    wait-blind per-cell solves (serial graphs never run the loop either
+    way), ``wait_iters`` caps the deterministic fixed-point iteration and
+    ``wait_damping`` ∈ (0, 1] is its update step.
     """
 
     def __init__(self, num_edges: int = 2, backhaul_bps: float = 200e6,
                  placement: str = "ring", backhaul_model: str = "serial",
-                 downlink_bps: float = 0.0):
+                 downlink_bps: float = 0.0, wait_aware: bool = True,
+                 wait_iters: int = 8, wait_damping: float = 0.5):
         if num_edges < 1:
             raise ValueError(f"num_edges must be ≥ 1, got {num_edges}")
         if backhaul_bps <= 0:
@@ -199,17 +207,28 @@ class HierTopology(Topology):
         if backhaul_model not in ("serial", "fifo", "ps"):
             raise ValueError(f"unknown backhaul_model {backhaul_model!r}; "
                              f"known: ['fifo', 'ps', 'serial']")
+        if wait_iters < 1:
+            raise ValueError(f"wait_iters must be ≥ 1, got {wait_iters}")
+        if not 0.0 < wait_damping <= 1.0:
+            raise ValueError(f"wait_damping must be in (0, 1], "
+                             f"got {wait_damping}")
         self.num_edges = int(num_edges)
         self.backhaul_bps = float(backhaul_bps)
         self.placement = placement
         self.backhaul_model = backhaul_model
         self.downlink_bps = float(downlink_bps)
+        self.wait_aware = bool(wait_aware)
+        self.wait_iters = int(wait_iters)
+        self.wait_damping = float(wait_damping)
 
     def params(self) -> dict:
         return {"num_edges": self.num_edges, "backhaul_bps": self.backhaul_bps,
                 "placement": self.placement,
                 "backhaul_model": self.backhaul_model,
-                "downlink_bps": self.downlink_bps}
+                "downlink_bps": self.downlink_bps,
+                "wait_aware": self.wait_aware,
+                "wait_iters": self.wait_iters,
+                "wait_damping": self.wait_damping}
 
     def edge_xy(self, fcfg: FedsLLMConfig,
                 net: Optional[dm.Network] = None) -> np.ndarray:
@@ -388,10 +407,14 @@ class EdgeAggTopology(HierTopology):
 
     def _backhaul_jobs(self, fcfg, assign, eta, totals):
         # one pre-aggregated delta per NON-EMPTY edge; it leaves for the
-        # cloud once the cell's slowest member has reported, and every
-        # member of the cell rides its edge's job
+        # cloud once the cell's slowest DEADLINE-SURVIVING member has
+        # reported, and every member of the cell rides its edge's job.  An
+        # outage'd member (+inf wireless total) never reports and is exactly
+        # the client the deadline mask drops — the edge aggregates without
+        # it, so it must not hold every finite cellmate's hop at +inf.  The
+        # arrival is +inf only when the WHOLE cell is outage'd.
         edges = np.unique(assign)
-        arrivals = np.array([np.max(totals[assign == m]) for m in edges])
+        arrivals = np.array([_finite_max(totals[assign == m]) for m in edges])
         job_of = np.searchsorted(edges, assign)
         return arrivals, np.full(len(edges), fcfg.s_c_bits), job_of
 
@@ -415,6 +438,13 @@ class RelayTopology(HierTopology):
         counts = np.bincount(assign, minlength=self.num_edges)
         V = dm.local_iters(fcfg, eta)
         return counts * (fcfg.s_c_bits + V * fcfg.s_bits)
+
+
+def _finite_max(x: np.ndarray) -> float:
+    """max over the finite entries; +inf when none are finite."""
+    x = np.asarray(x, float)
+    x = x[np.isfinite(x)]
+    return float(np.max(x)) if x.size else np.inf
 
 
 def _lloyd(xy: np.ndarray, init_centroids: np.ndarray,

@@ -109,6 +109,14 @@ def round_state(exp, campaign_seed: int, round_idx: int, *,
             kw["eta0"] = exp._eta0
         alloc = exp.topology.allocate(fcfg, net, assign, exp._allocate,
                                       strategy=exp.allocator_name, **kw)
+        if not alloc.feasible or not np.isfinite(alloc.eta):
+            # an infeasible Allocation carries eta=nan on purpose — adopting
+            # a fabricated η would silently train on an unsolvable round
+            raise ValueError(
+                f"round {round_idx}: allocator {exp.allocator_name!r} found "
+                f"no feasible allocation on this round's network (scenario "
+                f"{exp.scenario.name!r}, topology {exp.topology.name!r}) — "
+                f"refusing to adopt η from an infeasible solve")
         eta = quantize_eta(alloc.eta, fcfg.eta_bucket, fcfg.eta_train_max)
     else:
         alloc = retime_allocation(fcfg, net,

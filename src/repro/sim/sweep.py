@@ -45,6 +45,20 @@ from typing import Optional, Sequence
 import numpy as np
 
 DEFAULT_SCENARIOS = ("blockfade", "geo-blockfade")
+
+
+def _topo_label(spec) -> str:
+    """Record/JSON label of a topology grid entry.
+
+    Names pass through; ``Topology`` instances label as ``name`` or
+    ``name+<backhaul_model>`` under a queued backhaul, so the queued
+    variant of a graph is a distinct grid cell from its serial default
+    (the records table is JSON — it carries labels, never objects).
+    """
+    if isinstance(spec, str):
+        return spec
+    model = getattr(spec, "backhaul_model", "serial")
+    return spec.name if model == "serial" else f"{spec.name}+{model}"
 DEFAULT_ALLOCATORS = ("proposed", "BA")
 DEFAULT_TOPOLOGIES = ("star",)
 DEFAULT_SCHEDULES = ("sync",)
@@ -296,6 +310,7 @@ def run_sweep(run_cfg, num_rounds: int, *,
                                      allocator=a, topology=t,
                                      schedule=d, local_algo=la,
                                      workload=w, **exp_overrides)
+        t = _topo_label(t)  # instances become labels in records/meta
         res = exp.run(num_rounds=num_rounds, stream=stream,
                       batches=batches, batches_fn=batches_fn,
                       **campaign_kw)
@@ -316,7 +331,8 @@ def run_sweep(run_cfg, num_rounds: int, *,
                                      "eta_buckets": len(exp.eta_buckets)}
     return SweepResult(records=records, scenarios=tuple(scenarios),
                        allocators=tuple(allocators), num_rounds=num_rounds,
-                       meta=meta, topologies=tuple(topologies),
+                       meta=meta,
+                       topologies=tuple(_topo_label(t) for t in topologies),
                        schedules=tuple(schedules),
                        local_algos=tuple(local_algos),
                        workloads=tuple(workloads))
@@ -350,6 +366,14 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="per-client data distributions "
                          "(repro.fl.workloads): iid | quantity-skew | "
                          "length-skew | dirichlet")
+    ap.add_argument("--backhaul-model", default="serial",
+                    choices=("serial", "fifo", "ps"),
+                    help="edge→cloud backhaul discipline for every "
+                         "hierarchical topology on the grid: 'serial' is "
+                         "the legacy per-cell pipe; 'fifo'/'ps' share one "
+                         "queued metro link and turn on the wait-aware "
+                         "allocator loop (cells label as e.g. "
+                         "'edge-cloud+fifo')")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--cohort", type=int, default=4)
@@ -367,8 +391,16 @@ def main(argv: Optional[list[str]] = None) -> None:
                         fedsllm=FedsLLMConfig(num_clients=args.clients))
     stream = TokenStream(2, 32 if args.smoke else 64, cfg.vocab_size, seed=0)
     overrides = {} if args.eta is None else {"eta": args.eta}
+    topo_grid = list(args.topologies)
+    if args.backhaul_model != "serial":
+        from repro.net.topology import get_topology
+
+        # star has no backhaul leg — only hierarchical graphs re-instantiate
+        topo_grid = [t if t == "star" else
+                     type(get_topology(t))(backhaul_model=args.backhaul_model)
+                     for t in topo_grid]
     res = run_sweep(run_cfg, args.rounds, scenarios=args.scenarios,
-                    allocators=args.allocators, topologies=args.topologies,
+                    allocators=args.allocators, topologies=topo_grid,
                     schedules=args.schedules, local_algos=args.local_algos,
                     workloads=args.workloads, stream=stream,
                     cohort=args.cohort, reallocate=args.reallocate,

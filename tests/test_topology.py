@@ -13,9 +13,12 @@ import pytest
 from repro.api import Experiment, get_topology, topologies
 from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
                           get_arch, smoke_variant)
+from repro.api.allocators import get_allocator
 from repro.core import delay_model as dm
 from repro.core import fedsllm
-from repro.net.allocation import cell_latency, subnetwork
+from repro.core.resource_alloc import Allocation
+from repro.net import allocation
+from repro.net.allocation import cell_latency, solve_wait_aware, subnetwork
 from repro.net.topology import (EdgeAggTopology, EdgeCloudTopology,
                                 HierTopology, RelayTopology, Topology)
 from repro.sim import events
@@ -587,3 +590,246 @@ def test_downlink_broadcast_adds_one_multicast_per_cell(fcfg):
     np.testing.assert_allclose(t_dl.downlink, cost)
     np.testing.assert_allclose(np.asarray(t_dl.total),
                                np.asarray(t_base.total) + cost)
+
+
+# ---------------------------------------------------------------------------
+# Wait-aware allocation: the allocator↔queueing loop under contended backhaul
+# ---------------------------------------------------------------------------
+
+CONTENDED_BPS = 2e3  # two cells' bursts sharing one deliberately thin pipe
+
+
+def _contended(fcfg, model, **kw):
+    sc = get_scenario("geo-blockfade")
+    net0 = sc.initial_network(fcfg, seed=0)
+    topo = EdgeCloudTopology(num_edges=2, backhaul_model=model,
+                             backhaul_bps=CONTENDED_BPS, **kw)
+    net, assign = topo.localize(fcfg, net0)
+    return topo, net, assign
+
+
+def _blind_solve(fcfg, net, assign, topo, alloc_fn, eta):
+    """The wait-blind per-cell solve at one η, priced through the TRUE
+    queued round_timing — the pre-loop allocator's answer."""
+    cells = [np.where(assign == m)[0] for m in range(topo.num_edges)]
+    solved = [(idx, alloc_fn(fcfg, subnetwork(net, idx),
+                             eta_grid=np.array([eta])))
+              for idx in cells if len(idx)]
+    return allocation._combine(fcfg, net, assign, topo, solved, eta,
+                               "proposed")
+
+
+@pytest.mark.parametrize("model", ["fifo", "ps"])
+def test_wait_aware_beats_wait_blind_under_contention(fcfg, model):
+    """The tentpole acceptance: on a contended fixture (two cells, one thin
+    metro pipe) the wait-aware fixed point must return a strictly faster
+    end-to-end T than the wait-blind per-cell solve at the same η — both
+    priced through the true queued round_timing."""
+    topo, net, assign = _contended(fcfg, model)
+    alloc_fn = get_allocator("proposed")
+    eta = 0.3
+    aware, info = solve_wait_aware(fcfg, net, assign, topo, alloc_fn, eta)
+    blind = _blind_solve(fcfg, net, assign, topo, alloc_fn, eta)
+    assert info.converged and info.iters <= topo.wait_iters
+    assert aware is not None and blind is not None
+    assert aware.T < blind.T, (aware.T, blind.T)
+    # the reported T is exactly the true-queue critical path
+    timing = topo.round_timing(fcfg, net, aware, eta, assign)
+    I0 = dm.global_rounds(fcfg, eta)
+    assert aware.T == pytest.approx(I0 * float(np.max(timing.total)))
+
+
+def test_wait_aware_allocate_beats_baselines_per_cell():
+    """End-to-end through the η sweep: the wait-aware proposed allocate is
+    never worse than the wait-blind proposed allocate on the same grid, and
+    beats EB/FE/BA in every non-empty cell under the queued pipe.
+
+    The fixture is transmission-bound (small wireless pools) with a
+    moderately loaded metro queue: on a compute-bound draw the bandwidth
+    split is irrelevant and EB — which sweeps the same η grid — ties the
+    exact solver to within queue-arrival epsilon, so per-cell strictness
+    would test the channel draw, not the allocator."""
+    fcfg = FedsLLMConfig(num_clients=K, bandwidth_total_hz=2e5)
+    sc = get_scenario("geo-blockfade")
+    net0 = sc.initial_network(fcfg, seed=1)
+    topo = EdgeCloudTopology(num_edges=2, backhaul_model="fifo",
+                             backhaul_bps=2e5, wait_iters=2)
+    blind_topo = EdgeCloudTopology(num_edges=2, backhaul_model="fifo",
+                                   backhaul_bps=2e5, wait_aware=False)
+    net, assign = topo.localize(fcfg, net0)
+    prop_fn = get_allocator("proposed")
+    kw = dict(strategy="proposed", eta_search="warm", eta0=0.3)
+    aware = topo.allocate(fcfg, net, assign, prop_fn, **kw)
+    blind = blind_topo.allocate(fcfg, net, assign, prop_fn, **kw)
+    assert aware.feasible and blind.feasible
+    assert aware.T <= blind.T
+    T_aware = cell_latency(fcfg, net, aware, assign, topo, aware.eta)
+    for strat in ("EB", "FE", "BA"):
+        base = topo.allocate(fcfg, net, assign, get_allocator(strat),
+                             strategy=strat, eta_search="warm", eta0=0.3)
+        T_base = cell_latency(fcfg, net, base, assign, topo, base.eta)
+        for m in range(topo.num_edges):
+            if not np.isnan(T_aware[m]):
+                assert T_aware[m] < T_base[m], (strat, m, T_aware, T_base)
+
+
+def test_wait_aware_flag_is_inert_on_serial_backhaul(fcfg):
+    """backhaul_model="serial" keeps the legacy allocator bit-identical:
+    the loop never engages (no wait_diag) and the flag changes nothing."""
+    sc = get_scenario("geo-blockfade")
+    net0 = sc.initial_network(fcfg, seed=0)
+    prop_fn = get_allocator("proposed")
+    allocs = []
+    for flag in (True, False):
+        topo = EdgeCloudTopology(num_edges=2, wait_aware=flag)
+        net, assign = topo.localize(fcfg, net0)
+        a = topo.allocate(fcfg, net, assign, prop_fn, strategy="proposed",
+                          eta_search="warm", eta0=0.02)
+        assert not hasattr(topo, "wait_diag")
+        allocs.append(a)
+    a, b = allocs
+    assert a.T == b.T and a.eta == b.eta
+    np.testing.assert_array_equal(a.b_c, b.b_c)
+    np.testing.assert_array_equal(a.b_s, b.b_s)
+    np.testing.assert_array_equal(a.t_c, b.t_c)
+    np.testing.assert_array_equal(a.t_s, b.t_s)
+
+
+def test_edge_agg_queued_outage_keeps_cell_backhaul_finite(fcfg):
+    """Regression (edge-agg × queued × outage): a +inf member must not
+    poison its cell's pre-aggregated job — the edge forwards once its
+    FINITE members are in; only a fully-dead cell never reaches the
+    queue."""
+    topo = EdgeAggTopology(num_edges=2, backhaul_model="fifo",
+                           backhaul_bps=2e6)
+    assign = np.array([0, 0, 0, 1, 1, 1])
+    totals = np.array([1.0, 2.0, np.inf, 1.5, 2.5, 3.0])
+    arrivals, bits, job_of = topo._backhaul_jobs(fcfg, assign, 0.5, totals)
+    np.testing.assert_allclose(arrivals, [2.0, 3.0])  # finite-max per cell
+    hop = topo._queued_backhaul(fcfg, assign, 0.5, totals)
+    assert np.all(np.isfinite(hop[np.isfinite(totals)]))
+    assert hop[2] == 0.0  # the outage'd client never reaches the queue
+    # a fully-dead cell never arrives, and doesn't block the live one
+    dead = np.array([1.0, 2.0, 3.0, np.inf, np.inf, np.inf])
+    arr2, _, _ = topo._backhaul_jobs(fcfg, assign, 0.5, dead)
+    np.testing.assert_allclose(arr2, [3.0, np.inf])
+    hop2 = topo._queued_backhaul(fcfg, assign, 0.5, dead)
+    assert np.all(np.isfinite(hop2[:3])) and np.all(hop2[3:] == 0.0)
+
+
+def test_combine_prices_critical_path_over_finite_clients(fcfg):
+    """Regression (degenerate η sweep under outage): one +inf client must
+    not turn every η candidate into T=+inf — the sweep prices the
+    deadline-surviving critical path, +inf only when nobody is finite."""
+    topo = EdgeCloudTopology(num_edges=2)
+    sc = get_scenario("geo-blockfade")
+    net, assign = topo.localize(fcfg, sc.initial_network(fcfg, seed=0))
+
+    def cell_alloc(idx, dead=()):
+        n = len(idx)
+        t_c = np.where(np.isin(idx, list(dead)), np.inf, 1.0)
+        return Allocation(1.0, 0.3, 0.5, t_c, np.ones(n),
+                          np.full(n, 1e6), np.full(n, 1e6), True, "proposed")
+
+    cells = [np.where(assign == m)[0] for m in range(2)]
+    one_dead = [(idx, cell_alloc(idx, dead={int(cells[0][0])}))
+                for idx in cells]
+    combined = allocation._combine(fcfg, net, assign, topo, one_dead, 0.3,
+                                   "proposed")
+    assert np.isfinite(combined.T)
+    all_dead = [(idx, cell_alloc(idx, dead=set(map(int, idx))))
+                for idx in cells]
+    degenerate = allocation._combine(fcfg, net, assign, topo, all_dead, 0.3,
+                                     "proposed")
+    assert np.isinf(degenerate.T)
+
+
+def test_infeasible_allocation_carries_nan_eta(fcfg):
+    bad = allocation._infeasible(fcfg, "proposed")
+    assert not bad.feasible and np.isinf(bad.T) and np.isnan(bad.eta)
+
+
+def test_set_eta_refuses_non_finite(run_cfg):
+    exp = _fresh(run_cfg)
+    with pytest.raises(ValueError, match="non-finite"):
+        exp.set_eta(float("nan"))
+
+
+def test_realloc_round_refuses_infeasible_solve(run_cfg, monkeypatch):
+    """A reallocating round whose solve comes back infeasible must raise
+    with the round index instead of adopting a fabricated η."""
+    exp = _fresh(run_cfg, topology=EdgeCloudTopology(num_edges=2),
+                 scenario="geo-blockfade")
+    monkeypatch.setattr(exp.topology, "allocate",
+                        lambda *a, **k: allocation._infeasible(exp.fcfg, "EB"))
+    with pytest.raises(ValueError, match="round 3"):
+        events.round_state(exp, 0, 3, reallocate=True)
+
+
+HIER_TOPOS = ("edge-cloud", "edge-agg", "relay")
+GEO_SCENARIOS = ("geo-blockfade", "drift", "hetero", "outage", "shadowing")
+
+
+def test_wait_aware_fixed_point_deterministic_on_every_hier_cell(fcfg):
+    """Property: on every registered hierarchical topology × geometry
+    scenario the wait-aware fixed point at one η converges within its
+    deterministic cap and repeat calls are bit-identical — so campaigns
+    that re-solve per round stay pure functions of (RunConfig, seed)."""
+    prop_fn = get_allocator("proposed")
+    eta = 0.3
+    for tname in HIER_TOPOS:
+        for sname in GEO_SCENARIOS:
+            topo = type(get_topology(tname))(num_edges=2,
+                                             backhaul_model="fifo")
+            net, assign = topo.localize(
+                fcfg, get_scenario(sname).round_network(fcfg, 0, 1))
+            a1, i1 = solve_wait_aware(fcfg, net, assign, topo, prop_fn, eta)
+            a2, i2 = solve_wait_aware(fcfg, net, assign, topo, prop_fn, eta)
+            key = (tname, sname)
+            assert i1.converged and i1.iters <= topo.wait_iters, (key, i1)
+            assert (i1.iters, i1.max_delta) == (i2.iters, i2.max_delta), key
+            assert a1 is not None and a1.T == a2.T, key
+            np.testing.assert_array_equal(a1.b_c, a2.b_c, err_msg=str(key))
+            np.testing.assert_array_equal(a1.t_c, a2.t_c, err_msg=str(key))
+
+
+def test_wait_aware_realloc_campaign_bounded_traces(run_cfg, stream):
+    """A wait-aware reallocating campaign keeps the jit cache η-bucket
+    bounded and engages the fixed point every round (diag converged)."""
+    exp = _fresh(run_cfg, eta=0.2, allocator="proposed",
+                 topology=EdgeCloudTopology(num_edges=2,
+                                            backhaul_model="fifo"),
+                 scenario="geo-blockfade")
+    res = exp.run(num_rounds=2, stream=stream, cohort=COHORT,
+                  resample_channel=True, reallocate=True)
+    assert res.num_rounds == 2
+    assert exp.trace_count <= len(exp.eta_buckets)
+    for rec in res.records:
+        assert rec.eta in exp.eta_buckets
+    diag = exp.topology.wait_diag
+    assert diag and all(d.converged for d in diag)
+
+
+def test_queued_realloc_checkpoint_resume_bit_identical(run_cfg, stream,
+                                                        tmp_path):
+    """Checkpoint/resume replays a queued-backhaul reallocating campaign
+    bit-identically (the queued pricing and the new topology params ride
+    the digest)."""
+    mk = lambda: _fresh(run_cfg, eta=0.2,  # noqa: E731
+                        topology=EdgeCloudTopology(num_edges=2,
+                                                   backhaul_model="fifo"),
+                        scenario="geo-blockfade")
+    kw = dict(stream=stream, cohort=COHORT, resample_channel=True,
+              reallocate=True)
+    exp = mk()
+    full = exp.run(num_rounds=4, **kw)
+    assert exp.trace_count <= len(exp.eta_buckets)
+    ckpt = str(tmp_path / "camp")
+    mk().run(num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    rest = mk().run(num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    assert [r.round for r in rest.records] == [2, 3]
+    for ra_, rb in zip(full.records[2:], rest.records):
+        assert ra_.metrics == rb.metrics and ra_.eta == rb.eta
+    for a, b in zip(jax.tree.leaves((full.state.lora_c, full.state.lora_s)),
+                    jax.tree.leaves((rest.state.lora_c, rest.state.lora_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
