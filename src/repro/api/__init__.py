@@ -58,9 +58,16 @@ Data heterogeneity is a first-class *workload* on the same footing
 non-IID client-drift regimes where the local algorithms (and aggregators,
 schedules) actually separate.
 
+The client *population* model is the 9th axis (``repro.pop``): ``exact``
+(default, every simulated client materialised — bit-identical) |
+``compact`` (async rounds gather arrivals into a fixed-size window, so
+device cost per round is O(cohort) not O(K)) | ``meanfield`` (compact
+windows plus analytic queue pricing and representative-client allocation
+— the 10⁵-client campaign regime).
+
 ``Experiment.sweep`` fans a grid of topologies × scenarios × allocators ×
-schedules × local algorithms × workloads into one tidy records table
-(``repro.sim.sweep``) for cross-family comparisons.
+schedules × local algorithms × workloads × populations into one tidy
+records table (``repro.sim.sweep``) for cross-family comparisons.
 """
 
 from repro.api.aggregators import aggregators, get_aggregator
@@ -71,6 +78,7 @@ from repro.des.schedules import Schedule, get_schedule, schedules
 from repro.fl.local_algos import LocalAlgo, get_local_algo, local_algos
 from repro.fl.workloads import Workload, get_workload, workloads
 from repro.net.topology import Topology, get_topology, topologies
+from repro.pop import Population, get_population, populations
 from repro.registry import Registry
 from repro.sim.campaign import CampaignResult, RoundRecord
 from repro.sim.scenario import Scenario, get_scenario, scenarios
@@ -88,4 +96,5 @@ __all__ = [
     "schedules", "get_schedule", "Schedule",
     "local_algos", "get_local_algo", "LocalAlgo",
     "workloads", "get_workload", "Workload",
+    "populations", "get_population", "Population",
 ]

@@ -38,6 +38,7 @@ from repro.des.schedules import Schedule, get_schedule
 from repro.fl.local_algos import LocalAlgo, get_local_algo
 from repro.fl.workloads import Workload, get_workload
 from repro.net.topology import Topology, get_topology
+from repro.pop import Population, get_population
 
 
 @dataclass
@@ -73,6 +74,7 @@ class Experiment:
                  schedule: Union[str, Schedule] = "sync",
                  local_algo: Union[str, LocalAlgo] = "gd",
                  workload: Union[str, Workload] = "iid",
+                 population: Union[str, Population] = "exact",
                  seed: int = 0, remat: bool = False, dp_clip: float = 0.0,
                  dp_noise: float = 0.0, eta_search: str = "coarse",
                  lora_rank: int = 8, key: Optional[jax.Array] = None,
@@ -118,6 +120,14 @@ class Experiment:
         # the non-IID regimes the correctives exist for)
         self.local_algo = get_local_algo(local_algo)
         self.workload = get_workload(workload)
+        # the population model decides how the K simulated clients map onto
+        # simulated work (9th axis; ``exact`` is the default and
+        # bit-identical — every hook is the identity; ``compact`` gathers
+        # each async aggregation onto a fixed (C, …) window; ``meanfield``
+        # additionally restricts the event timeline and the per-cell
+        # allocator to seeded representatives and prices the FIFO/PS
+        # backhaul queues analytically — see ``repro.pop``)
+        self.population = get_population(population)
         # campaign engine re-solves (reallocate=True) with the same strategy
         self._allocate = allocate
         self._eta_search = eta_search
@@ -216,6 +226,11 @@ class Experiment:
         ``scaffold``; ``workload=`` the per-client data distribution
         (``repro.fl.workloads``): ``iid`` (the legacy stream semantics) |
         ``quantity-skew`` | ``length-skew`` | ``dirichlet``.
+        ``population=`` selects the client-population model
+        (``repro.pop``): ``exact`` (the default, bit-identical) |
+        ``compact`` (fixed-window O(cohort) device batches under async
+        schedules) | ``meanfield`` (plus representative timelines and
+        analytic queue pricing — the mega-scale regime).
         ``run_cfg.shape`` is *not* consumed here: batch geometry comes from
         the ``batches`` pytree handed to :meth:`run_round` (shape configs
         drive the data-stream construction at call sites).  Keyword
@@ -446,5 +461,6 @@ class Experiment:
                 f"codec={self.compressor_name} scenario={self.scenario.name} "
                 f"topo={self.topology.name} sched={self.schedule.name} "
                 f"algo={self.local_algo.name} workload={self.workload.name} "
+                f"pop={self.population.name} "
                 f"T*={self.alloc.T:.1f}s η*={self.alloc.eta:.2f} "
                 f"round={float(np.max(self.timing.total)):.2f}s")

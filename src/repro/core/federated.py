@@ -283,10 +283,33 @@ def broadcast(global_tree, K: int):
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), global_tree)
 
 
+# population size above which client_sample switches from the legacy
+# full-permutation draw (bit-identical — every pinned campaign golden lives
+# at K ≤ 64) to Floyd's O(cohort) sampling: mega-scale campaigns must never
+# materialise a length-K permutation per round (K=10⁵ × rounds would
+# dominate the host-side loop — see repro.pop)
+SAMPLE_MIN_CLIENTS = 64
+
+
 def client_sample(round_idx: int, num_clients: int, cohort: int, seed: int = 0) -> np.ndarray:
-    """Per-round client sampling (elastic cohorts)."""
+    """Per-round client sampling (elastic cohorts), sorted and
+    without replacement.
+
+    ``num_clients ≤ SAMPLE_MIN_CLIENTS`` keeps the legacy
+    ``Generator.choice`` permutation draw bit-identical; larger populations
+    use Floyd's algorithm on the same per-round Generator stream — O(cohort)
+    draws and memory, uniform over subsets, still a pure function of
+    ``(round_idx, seed)``.
+    """
     rng = np.random.default_rng(seed * 1_000_003 + round_idx)
-    return np.sort(rng.choice(num_clients, size=min(cohort, num_clients), replace=False))
+    size = min(cohort, num_clients)
+    if num_clients <= SAMPLE_MIN_CLIENTS:
+        return np.sort(rng.choice(num_clients, size=size, replace=False))
+    chosen: set = set()
+    for j in range(num_clients - size, num_clients):
+        t = int(rng.integers(0, j + 1))
+        chosen.add(t if t not in chosen else j)
+    return np.fromiter(sorted(chosen), np.int64, count=size)
 
 
 def deadline_mask(T_k: np.ndarray, deadline: float) -> np.ndarray:

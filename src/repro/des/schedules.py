@@ -350,14 +350,24 @@ class AsyncSchedule(Schedule):
                 f"through every aggregation; batches= has leading axis "
                 f"{fixed_cohort} — pass stream=/batches_fn= or K-sized "
                 f"batches")
-        if self.buffer_k > K:
+        # the population model (9th axis) may restrict the timeline to its
+        # representative clients (meanfield): only those launch/complete,
+        # so the event heap holds O(C) entries instead of O(K).  ``exact``
+        # and ``compact`` return None — the full population runs.
+        pop = getattr(exp, "population", None)
+        active = pop.timeline_clients() if pop is not None else None
+        members = (np.arange(K) if active is None
+                   else np.asarray(active, int))
+        if self.buffer_k > len(members):
             # the pending buffer is keyed by client (a recompletion
             # supersedes its own stale update), so it can never hold more
-            # than K distinct arrivals — the timeline would spin forever
+            # than len(members) distinct arrivals — the timeline would
+            # spin forever
             raise ValueError(
                 f"schedule {self.name!r} buffer_k={self.buffer_k} can never "
-                f"fill with only num_clients={K} (the buffer holds at most "
-                f"one pending update per client)")
+                f"fill with only {len(members)} timeline clients "
+                f"(num_clients={K}; the buffer holds at most one pending "
+                f"update per client)")
         durations, pricing = self._duration_table(exp, campaign_seed,
                                                   resample_channel,
                                                   reallocate, realloc_search)
@@ -439,8 +449,8 @@ class AsyncSchedule(Schedule):
                     sim.stop()
             launch(sim, k)
 
-        for k in range(K):
-            launch(sim, k)
+        for k in members:
+            launch(sim, int(k))
         sim.run(handler, max_events=max(10_000, 1_000 * (target + 1) * K))
         return _TimelinePlanner(plans, pricing)
 

@@ -1,0 +1,18 @@
+"""Client-population models (the 9th pluggable strategy axis).
+
+``exact`` (default, bit-identical) | ``compact`` (O(cohort) device batches)
+| ``meanfield`` (O(cohort) timelines + analytic queues) — see
+``repro.pop.population`` for the axis contract and
+``repro.pop.meanfield`` for the mean-field validity regime.
+"""
+
+from repro.pop.meanfield import (MeanFieldPopulation, meanfield_backhaul_hop,
+                                 REP_STREAM_TAG)
+from repro.pop.population import (CompactPopulation, ExactPopulation,
+                                  Population, get_population, populations)
+
+__all__ = [
+    "Population", "ExactPopulation", "CompactPopulation",
+    "MeanFieldPopulation", "get_population", "populations",
+    "meanfield_backhaul_hop", "REP_STREAM_TAG",
+]

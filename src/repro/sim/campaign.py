@@ -91,6 +91,7 @@ class CampaignResult:
     scenario: str = "blockfade"  # channel-dynamics family the rounds ran under
     topology: str = "star"  # network graph the rounds ran over
     schedule: str = "sync"  # execution discipline the rounds ran with
+    population: str = "exact"  # client-population model the rounds ran with
 
     @property
     def num_rounds(self) -> int:
@@ -180,7 +181,7 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
           Non-campaign checkpoints, and checkpoints from a different
           campaign — seed, η, allocator, scenario name, large-scale-state
           digest, topology name, attachment digest, execution-schedule,
-          local-algorithm or workload mismatch — are refused.  Stateful
+          local-algorithm, workload or population mismatch — are refused.  Stateful
           local algorithms (scaffold) checkpoint their control variates
           with the model, so resume is bit-identical there too.
 
@@ -272,6 +273,12 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                         ("workload", exp.workload.name),
                         ("workload_params",
                          repr(sorted(exp.workload.params().items()))),
+                        # the population model changes which clients ride
+                        # each round's window (compact/meanfield) — a name
+                        # or window/reps mismatch is a different campaign
+                        ("population", exp.population.name),
+                        ("population_params",
+                         repr(sorted(exp.population.params().items()))),
                         ("reallocate", reallocate)]
             if not (reallocate and meta.get("reallocate")):
                 # under joint reallocation η is derived per-round state, not
@@ -303,6 +310,14 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
     start = min(int(np.asarray(jax.device_get(exp.state.round))), target)
 
     base_alloc = exp.alloc  # the last *solved* allocation (retiming input)
+    # the population model (9th axis) binds its per-campaign state BEFORE
+    # the planner runs: the async timeline asks it which clients to launch
+    # (meanfield representatives) and the loop below asks it to compact
+    # each round's plan onto the fixed window; re-binding on every run()
+    # keeps campaigns pure in (RunConfig, seed) and resume-replayable.
+    # ``exact`` binds nothing and every hook is the identity.
+    pop = exp.population
+    pop.begin_campaign(K, cohort, campaign_seed)
     # the execution schedule (6th axis) decides which client states feed
     # each aggregation, at what staleness weight, and what the round costs
     # on the simulated clock; ``sync`` replays the legacy event order
@@ -342,12 +357,17 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
         plan = planner.round_plan(r, ids)
         if plan.client_ids is not None:  # async family: full population
             ids = plan.client_ids
+        # population compaction: gather the arrivals + in-flight window of
+        # a K-sized async plan onto the fixed (C,) window (identity under
+        # ``exact`` and for sync-family plans)
+        plan, ids = pop.compact_plan(plan, ids, r)
         mask_np = plan.mask
         mask = None if mask_np is None else jnp.asarray(mask_np)
         round_time = plan.round_time
 
         # (d) train the round through the ONE jitted round function
-        res = exp.run_round(batches_fn(r, ids), mask=mask, client_ids=ids,
+        res = exp.run_round(pop.device_batch(batches_fn(r, ids)),
+                            mask=mask, client_ids=ids,
                             weight_scale=plan.weight_scale,
                             update_scale=plan.update_scale)
 
@@ -376,7 +396,8 @@ def run_campaign(exp: "Experiment", num_rounds: Optional[int] = None, *,
                           total_time=cumulative, rounds_lemma1=rounds_lemma1,
                           stopped_by=stopped_by, scenario=scenario.name,
                           topology=exp.topology.name,
-                          schedule=exp.schedule.name)
+                          schedule=exp.schedule.name,
+                          population=exp.population.name)
 
 
 def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
@@ -400,4 +421,7 @@ def _save(ckpt: Checkpointer, exp: "Experiment", rounds_done: int,
                "local_algo_params": repr(sorted(exp.local_algo.params().items())),
                "workload": exp.workload.name,
                "workload_params": repr(sorted(exp.workload.params().items())),
+               "population": exp.population.name,
+               "population_params":
+                   repr(sorted(exp.population.params().items())),
                "reallocate": reallocate})

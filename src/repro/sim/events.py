@@ -100,6 +100,11 @@ def round_state(exp, campaign_seed: int, round_idx: int, *,
     fcfg = exp.fcfg
     if not resample:
         return exp.net, exp.assign, exp.alloc, exp.eta, exp.timing
+    # the population model (9th axis) may replace the exact queue pricing
+    # with its analytic mean-field model and restrict per-cell re-solves to
+    # representative clients; ``exact`` (and any unbound population) leaves
+    # every path below bit-identical
+    pop = getattr(exp, "population", None)
     net, assign = localized_round_network(fcfg, campaign_seed, round_idx,
                                           scenario=exp.scenario,
                                           topology=exp.topology)
@@ -108,7 +113,8 @@ def round_state(exp, campaign_seed: int, round_idx: int, *,
         if realloc_search == "warm":
             kw["eta0"] = exp._eta0
         alloc = exp.topology.allocate(fcfg, net, assign, exp._allocate,
-                                      strategy=exp.allocator_name, **kw)
+                                      strategy=exp.allocator_name,
+                                      population=pop, **kw)
         if not alloc.feasible or not np.isfinite(alloc.eta):
             # an infeasible Allocation carries eta=nan on purpose — adopting
             # a fabricated η would silently train on an unsolvable round
@@ -122,7 +128,8 @@ def round_state(exp, campaign_seed: int, round_idx: int, *,
         alloc = retime_allocation(fcfg, net,
                                   exp.alloc if base_alloc is None else base_alloc)
         eta = exp.eta
-    timing = exp.topology.round_timing(fcfg, net, alloc, eta, assign)
+    timing = exp.topology.round_timing(fcfg, net, alloc, eta, assign,
+                                       population=pop)
     return net, assign, alloc, eta, timing
 
 

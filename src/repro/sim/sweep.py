@@ -1,8 +1,10 @@
-"""Topology × scenario × allocator × schedule × local-algo × workload sweep.
+"""Topology × scenario × allocator × schedule × local-algo × workload ×
+population sweep.
 
 One call fans a grid of network topologies × channel-dynamics scenarios ×
 resource-allocation strategies × execution schedules × local-update
-algorithms × data workloads into identical campaigns over the same
+algorithms × data workloads × client-population models (``repro.pop``:
+``exact`` | ``compact`` | ``meanfield``) into identical campaigns over the same
 ``RunConfig``, collecting every round of every cell into one tidy
 long-format records table — the shape the paper's Fig. 2 comparison wants:
 the proposed allocator's delay reduction vs the BA baseline, reproducible
@@ -64,6 +66,12 @@ DEFAULT_TOPOLOGIES = ("star",)
 DEFAULT_SCHEDULES = ("sync",)
 DEFAULT_LOCAL_ALGOS = ("gd",)
 DEFAULT_WORKLOADS = ("iid",)
+DEFAULT_POPULATIONS = ("exact",)
+
+
+def _pop_label(spec) -> str:
+    """Record/JSON label of a population grid entry (name or instance)."""
+    return spec if isinstance(spec, str) else spec.name
 
 
 @dataclass
@@ -71,7 +79,7 @@ class SweepResult:
     """A finished sweep: long-format per-round records + grid metadata."""
 
     records: list[dict]  # one dict per (topology, scenario, allocator,
-    #                      schedule, local_algo, workload, round)
+    #                      schedule, local_algo, workload, population, round)
     scenarios: tuple[str, ...]
     allocators: tuple[str, ...]
     num_rounds: int
@@ -80,32 +88,38 @@ class SweepResult:
     schedules: tuple[str, ...] = DEFAULT_SCHEDULES
     local_algos: tuple[str, ...] = DEFAULT_LOCAL_ALGOS
     workloads: tuple[str, ...] = DEFAULT_WORKLOADS
+    populations: tuple[str, ...] = DEFAULT_POPULATIONS
 
     _AXIS_ARG = {"topologies": "topology", "schedules": "schedule",
-                 "local_algos": "local_algo", "workloads": "workload"}
+                 "local_algos": "local_algo", "workloads": "workload",
+                 "populations": "population"}
 
     def cell(self, scenario: str, allocator: str,
              topology: Optional[str] = None,
              schedule: Optional[str] = None,
              local_algo: Optional[str] = None,
-             workload: Optional[str] = None) -> list[dict]:
+             workload: Optional[str] = None,
+             population: Optional[str] = None) -> list[dict]:
         """The per-round records of one grid cell, in round order.
 
-        ``topology``/``schedule``/``local_algo``/``workload`` may be omitted
-        only when the grid has a single entry on that axis (the pre-axis
-        call signatures); on a multi-entry grid an explicit name is required
-        — silently merging graphs, disciplines or drift regimes would hand
-        callers interleaved rounds from different campaigns."""
+        ``topology``/``schedule``/``local_algo``/``workload``/``population``
+        may be omitted only when the grid has a single entry on that axis
+        (the pre-axis call signatures); on a multi-entry grid an explicit
+        name is required — silently merging graphs, disciplines or drift
+        regimes would hand callers interleaved rounds from different
+        campaigns."""
         topology = self._only("topologies", topology)
         schedule = self._only("schedules", schedule)
         local_algo = self._only("local_algos", local_algo)
         workload = self._only("workloads", workload)
+        population = self._only("populations", population)
         return [r for r in self.records
                 if r["scenario"] == scenario and r["allocator"] == allocator
                 and r.get("topology", "star") == topology
                 and r.get("schedule", "sync") == schedule
                 and r.get("local_algo", "gd") == local_algo
-                and r.get("workload", "iid") == workload]
+                and r.get("workload", "iid") == workload
+                and r.get("population", "exact") == population]
 
     def _only(self, axis: str, value: Optional[str]) -> str:
         entries = getattr(self, axis)
@@ -119,10 +133,12 @@ class SweepResult:
 
     def _grid(self):
         yield from product(self.topologies, self.scenarios, self.allocators,
-                           self.schedules, self.local_algos, self.workloads)
+                           self.schedules, self.local_algos, self.workloads,
+                           self.populations)
 
     def _key(self, topology: str, scenario: str, schedule: str,
-             local_algo: str = None, workload: str = None) -> str:
+             local_algo: str = None, workload: str = None,
+             population: str = None) -> str:
         """Reporting key: scenario, prefixed/suffixed by whichever extra
         axes the grid actually spans (single-axis grids keep the short
         pre-axis keys, e.g. ``"blockfade"`` or ``"star/blockfade"``)."""
@@ -133,25 +149,27 @@ class SweepResult:
             key = f"{key}/{local_algo}"
         if workload is not None and len(self.workloads) > 1:
             key = f"{key}/{workload}"
+        if population is not None and len(self.populations) > 1:
+            key = f"{key}/{population}"
         return key
 
     def summary(self) -> list[dict]:
         """One row per cell: simulated campaign time, final loss, stragglers."""
         out = []
-        for t, s, a, d, la, w in self._grid():
-            rows = self.cell(s, a, t, d, la, w)
+        for t, s, a, d, la, w, p in self._grid():
+            rows = self.cell(s, a, t, d, la, w, p)
             if not rows:
                 continue
             slots = sum(r["cohort_size"] for r in rows)
             lost = sum(r["cohort_size"] - r["survivors"] for r in rows)
             out.append({
                 "topology": t, "scenario": s, "allocator": a, "schedule": d,
-                "local_algo": la, "workload": w,
+                "local_algo": la, "workload": w, "population": p,
                 "rounds": len(rows),
                 "total_time": rows[-1]["cumulative_time"],
                 "final_loss": rows[-1]["loss_round_start"],
                 "straggler_rate": lost / max(slots, 1),
-                **self.meta.get((t, s, a, d, la, w), {}),
+                **self.meta.get((t, s, a, d, la, w, p), {}),
             })
         return out
 
@@ -163,13 +181,13 @@ class SweepResult:
         and per execution discipline (keys become
         ``"topology/scenario[/schedule]"``)."""
         out = {}
-        for t, s, d, la, w in product(self.topologies, self.scenarios,
-                                      self.schedules, self.local_algos,
-                                      self.workloads):
-            a = self.cell(s, allocator, t, d, la, w)
-            b = self.cell(s, baseline, t, d, la, w)
+        for t, s, d, la, w, p in product(self.topologies, self.scenarios,
+                                         self.schedules, self.local_algos,
+                                         self.workloads, self.populations):
+            a = self.cell(s, allocator, t, d, la, w, p)
+            b = self.cell(s, baseline, t, d, la, w, p)
             if a and b and b[-1]["cumulative_time"] > 0:
-                out[self._key(t, s, d, la, w)] = 100.0 * (
+                out[self._key(t, s, d, la, w, p)] = 100.0 * (
                     1.0 - a[-1]["cumulative_time"]
                     / b[-1]["cumulative_time"])
         return out
@@ -183,22 +201,24 @@ class SweepResult:
         out = {}
         if baseline not in self.schedules:
             return out
-        for t, s, a, la, w in product(self.topologies, self.scenarios,
-                                      self.allocators, self.local_algos,
-                                      self.workloads):
-            base = self.cell(s, a, t, baseline, la, w)
+        for t, s, a, la, w, p in product(self.topologies, self.scenarios,
+                                         self.allocators, self.local_algos,
+                                         self.workloads, self.populations):
+            base = self.cell(s, a, t, baseline, la, w, p)
             if not base or base[-1]["cumulative_time"] <= 0:
                 continue
             for d in self.schedules:
                 if d == baseline:
                     continue
-                rows = self.cell(s, a, t, d, la, w)
+                rows = self.cell(s, a, t, d, la, w, p)
                 if rows:
                     key = f"{t}/{s}/{a}/{d}"
                     if len(self.local_algos) > 1:
                         key = f"{key}/{la}"
                     if len(self.workloads) > 1:
                         key = f"{key}/{w}"
+                    if len(self.populations) > 1:
+                        key = f"{key}/{p}"
                     out[key] = 100.0 * (
                         1.0 - rows[-1]["cumulative_time"]
                         / base[-1]["cumulative_time"])
@@ -216,20 +236,22 @@ class SweepResult:
         out = {}
         if baseline not in self.local_algos:
             return out
-        for t, s, a, d, w in product(self.topologies, self.scenarios,
-                                     self.allocators, self.schedules,
-                                     self.workloads):
-            base = self.cell(s, a, t, d, baseline, w)
+        for t, s, a, d, w, p in product(self.topologies, self.scenarios,
+                                        self.allocators, self.schedules,
+                                        self.workloads, self.populations):
+            base = self.cell(s, a, t, d, baseline, w, p)
             if not base or base[-1]["loss_round_start"] <= 0:
                 continue
             for la in self.local_algos:
                 if la == baseline:
                     continue
-                rows = self.cell(s, a, t, d, la, w)
+                rows = self.cell(s, a, t, d, la, w, p)
                 if rows:
                     key = f"{self._key(t, s, d)}/{w}/{la}"
                     if len(self.allocators) > 1:
                         key = f"{a}:{key}"
+                    if len(self.populations) > 1:
+                        key = f"{key}/{p}"
                     out[key] = 100.0 * (
                         1.0 - rows[-1]["loss_round_start"]
                         / base[-1]["loss_round_start"])
@@ -252,6 +274,7 @@ class SweepResult:
             "schedules": list(self.schedules),
             "local_algos": list(self.local_algos),
             "workloads": list(self.workloads),
+            "populations": list(self.populations),
             "num_rounds": self.num_rounds,
             "records": self.records,
             "summary": self.summary(),
@@ -275,11 +298,12 @@ def run_sweep(run_cfg, num_rounds: int, *,
               schedules: Sequence[str] = DEFAULT_SCHEDULES,
               local_algos: Sequence[str] = DEFAULT_LOCAL_ALGOS,
               workloads: Sequence[str] = DEFAULT_WORKLOADS,
+              populations: Sequence[str] = DEFAULT_POPULATIONS,
               stream=None, batches=None, batches_fn=None,
               exp_overrides: Optional[dict] = None,
               **campaign_kw) -> SweepResult:
     """Run the same campaign through every (topology, scenario, allocator,
-    schedule, local_algo, workload) cell.
+    schedule, local_algo, workload, population) cell.
 
     Each cell builds a fresh ``Experiment`` from ``run_cfg`` (so cells are
     independent and individually deterministic — the whole sweep is a pure
@@ -304,13 +328,16 @@ def run_sweep(run_cfg, num_rounds: int, *,
     exp_overrides = dict(exp_overrides or {})
     records: list[dict] = []
     meta: dict = {}
-    for t, s, a, d, la, w in product(topologies, scenarios, allocators,
-                                     schedules, local_algos, workloads):
+    for t, s, a, d, la, w, p in product(topologies, scenarios, allocators,
+                                        schedules, local_algos, workloads,
+                                        populations):
         exp = Experiment.from_config(run_cfg, scenario=s,
                                      allocator=a, topology=t,
                                      schedule=d, local_algo=la,
-                                     workload=w, **exp_overrides)
+                                     workload=w, population=p,
+                                     **exp_overrides)
         t = _topo_label(t)  # instances become labels in records/meta
+        p = _pop_label(p)
         res = exp.run(num_rounds=num_rounds, stream=stream,
                       batches=batches, batches_fn=batches_fn,
                       **campaign_kw)
@@ -318,6 +345,7 @@ def run_sweep(run_cfg, num_rounds: int, *,
             records.append({
                 "topology": t, "scenario": s, "allocator": a,
                 "schedule": d, "local_algo": la, "workload": w,
+                "population": p,
                 "round": rec.round,
                 "eta": rec.eta, "alloc_T": float(rec.alloc.T),
                 "cohort_size": rec.cohort_size,
@@ -326,16 +354,17 @@ def run_sweep(run_cfg, num_rounds: int, *,
                 "cumulative_time": rec.cumulative_time,
                 **rec.metrics,
             })
-        meta[(t, s, a, d, la, w)] = {"trace_count": exp.trace_count,
-                                     "eta_star": float(exp.alloc.eta),
-                                     "eta_buckets": len(exp.eta_buckets)}
+        meta[(t, s, a, d, la, w, p)] = {"trace_count": exp.trace_count,
+                                        "eta_star": float(exp.alloc.eta),
+                                        "eta_buckets": len(exp.eta_buckets)}
     return SweepResult(records=records, scenarios=tuple(scenarios),
                        allocators=tuple(allocators), num_rounds=num_rounds,
                        meta=meta,
                        topologies=tuple(_topo_label(t) for t in topologies),
                        schedules=tuple(schedules),
                        local_algos=tuple(local_algos),
-                       workloads=tuple(workloads))
+                       workloads=tuple(workloads),
+                       populations=tuple(_pop_label(p) for p in populations))
 
 
 def main(argv: Optional[list[str]] = None) -> None:
@@ -366,6 +395,11 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="per-client data distributions "
                          "(repro.fl.workloads): iid | quantity-skew | "
                          "length-skew | dirichlet")
+    ap.add_argument("--populations", nargs="+",
+                    default=list(DEFAULT_POPULATIONS),
+                    help="client-population models (repro.pop): exact | "
+                         "compact | meanfield — 'compact'/'meanfield' make "
+                         "large --clients campaigns O(cohort) per round")
     ap.add_argument("--backhaul-model", default="serial",
                     choices=("serial", "fifo", "ps"),
                     help="edge→cloud backhaul discipline for every "
@@ -402,7 +436,8 @@ def main(argv: Optional[list[str]] = None) -> None:
     res = run_sweep(run_cfg, args.rounds, scenarios=args.scenarios,
                     allocators=args.allocators, topologies=topo_grid,
                     schedules=args.schedules, local_algos=args.local_algos,
-                    workloads=args.workloads, stream=stream,
+                    workloads=args.workloads, populations=args.populations,
+                    stream=stream,
                     cohort=args.cohort, reallocate=args.reallocate,
                     exp_overrides=overrides)
     for row in res.summary():

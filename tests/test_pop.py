@@ -1,0 +1,362 @@
+"""Population axis (repro.pop): exact/compact/meanfield — compaction
+equivalence, O(cohort) sampling, mean-field queue validation against the
+exact DES and the analytic M/D/1 / PS references, checkpoint identity."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment, populations
+from repro.config import (FedsLLMConfig, LoRAConfig, RunConfig, SHAPES,
+                          get_arch, smoke_variant)
+from repro.core import federated
+from repro.data.tokens import TokenStream
+from repro.des import queueing
+from repro.des.schedules import RoundPlan
+from repro.net.topology import EdgeCloudTopology
+from repro.pop import (CompactPopulation, ExactPopulation,
+                       MeanFieldPopulation, get_population,
+                       meanfield_backhaul_hop)
+
+K = 12       # simulated population (bigger than the cohort — compaction real)
+COHORT = 4
+ROUNDS = 3
+
+
+@pytest.fixture(scope="module")
+def run_cfg():
+    cfg = smoke_variant(get_arch("fedsllm-100m")).replace(
+        lora=LoRAConfig(rank=4, alpha=8.0))
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     fedsllm=FedsLLMConfig(num_clients=K))
+
+
+@pytest.fixture(scope="module")
+def stream(run_cfg):
+    return TokenStream(2, 32, run_cfg.model.vocab_size, seed=0)
+
+
+def _fresh(run_cfg, **kw):
+    kw.setdefault("allocator", "EB")
+    kw.setdefault("topology", "edge-cloud")
+    kw.setdefault("scenario", "geo-blockfade")
+    kw.setdefault("schedule", "async")
+    return Experiment.from_config(run_cfg, **kw)
+
+
+def _state_leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves((state.lora_c,
+                                                    state.lora_s))]
+
+
+# ---------------------------------------------------------------------------
+# Registry + resolution
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_and_resolution():
+    assert set(populations.names()) >= {"exact", "compact", "meanfield"}
+    assert isinstance(get_population("exact"), ExactPopulation)
+    assert isinstance(get_population("compact"), CompactPopulation)
+    assert isinstance(get_population("meanfield"), MeanFieldPopulation)
+    inst = CompactPopulation(window=7)
+    assert get_population(inst) is inst
+    with pytest.raises(KeyError):
+        get_population("fluid")
+
+
+def test_exact_is_the_default_and_every_hook_is_identity(run_cfg):
+    exp = _fresh(run_cfg, schedule="sync")
+    assert exp.population.name == "exact"
+    pop = ExactPopulation()
+    pop.begin_campaign(100, 8, 0)
+    plan = RoundPlan(round=0, mask=np.ones(5), round_time=1.0)
+    out, ids = pop.compact_plan(plan, np.arange(5), 0)
+    assert out is plan
+    np.testing.assert_array_equal(ids, np.arange(5))
+    assert pop.timeline_clients() is None
+    assert pop.queued_hop(None, None, None, None, None) is None
+    batches = {"x": np.ones(3)}
+    assert pop.device_batch(batches) is batches
+
+
+# ---------------------------------------------------------------------------
+# O(cohort) client sampling (satellite: federated.client_sample)
+# ---------------------------------------------------------------------------
+
+
+def test_client_sample_small_k_bit_identical_to_legacy():
+    """K ≤ SAMPLE_MIN_CLIENTS keeps the legacy rng.choice draw bit-exactly
+    (campaign goldens at the paper's K=8–64 depend on it)."""
+    for round_idx, num_clients, cohort, seed in [(0, 8, 4, 0), (3, 50, 10, 7),
+                                                 (11, 64, 16, 2)]:
+        got = federated.client_sample(round_idx, num_clients, cohort,
+                                      seed=seed)
+        rng = np.random.default_rng(seed * 1_000_003 + round_idx)
+        want = np.sort(rng.choice(num_clients,
+                                  size=min(cohort, num_clients),
+                                  replace=False))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_client_sample_large_k_properties():
+    """Above the legacy threshold the Floyd draw must stay deterministic,
+    sorted, unique, in-range and cohort-sized — without materialising a
+    length-K permutation."""
+    Kbig = 100_000
+    s1 = federated.client_sample(5, Kbig, 32, seed=3)
+    s2 = federated.client_sample(5, Kbig, 32, seed=3)
+    np.testing.assert_array_equal(s1, s2)
+    assert len(s1) == 32 and len(np.unique(s1)) == 32
+    assert s1.min() >= 0 and s1.max() < Kbig
+    assert np.all(np.diff(s1) > 0)
+    # different rounds / seeds give different cohorts
+    assert not np.array_equal(s1, federated.client_sample(6, Kbig, 32, seed=3))
+    assert not np.array_equal(s1, federated.client_sample(5, Kbig, 32, seed=4))
+
+
+# ---------------------------------------------------------------------------
+# Compaction: fixed window, single trace, bit-identical aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_compact_plan_window_semantics():
+    pop = CompactPopulation(window=5)
+    pop.begin_campaign(20, 4, 0)
+    mask = np.zeros(20)
+    mask[[3, 17]] = 1.0
+    plan = RoundPlan(round=0, mask=mask, round_time=1.0,
+                     client_ids=np.arange(20),
+                     weight_scale=np.linspace(0.1, 2.0, 20),
+                     staleness=np.arange(20, dtype=float))
+    out, ids = pop.compact_plan(plan, np.arange(20), round_idx=2)
+    assert len(ids) == 5 and np.all(np.diff(ids) > 0)
+    assert {3, 17} <= set(ids.tolist())  # arrivals always ride the window
+    np.testing.assert_array_equal(out.client_ids, ids)
+    np.testing.assert_array_equal(out.mask, mask[ids])
+    np.testing.assert_array_equal(out.weight_scale, plan.weight_scale[ids])
+    # pure in round_idx: the identical call compacts identically (resume)
+    out2, ids2 = pop.compact_plan(plan, np.arange(20), round_idx=2)
+    np.testing.assert_array_equal(ids, ids2)
+    # a different round rotates the fill through the pool
+    _, ids3 = pop.compact_plan(plan, np.arange(20), round_idx=3)
+    assert not np.array_equal(ids, ids3)
+
+
+def test_compact_plan_refuses_overfull_window():
+    pop = CompactPopulation(window=2)
+    pop.begin_campaign(10, 2, 0)
+    plan = RoundPlan(round=0, mask=np.ones(10), round_time=1.0,
+                     client_ids=np.arange(10))
+    with pytest.raises(ValueError, match="window"):
+        pop.compact_plan(plan, np.arange(10), 0)
+
+
+def test_compact_plan_identity_for_sync_plans_and_full_windows():
+    pop = CompactPopulation()
+    pop.begin_campaign(6, 6, 0)  # window == K: degenerates to exact
+    plan = RoundPlan(round=0, mask=np.ones(6), round_time=1.0,
+                     client_ids=np.arange(6))
+    out, ids = pop.compact_plan(plan, np.arange(6), 0)
+    assert out is plan
+    sync_plan = RoundPlan(round=0, mask=None, round_time=1.0)
+    pop2 = CompactPopulation(window=2)
+    pop2.begin_campaign(6, 2, 0)
+    out2, _ = pop2.compact_plan(sync_plan, np.arange(2), 0)
+    assert out2 is sync_plan
+
+
+def test_compact_campaign_matches_exact_bit_identical(run_cfg, stream):
+    """The tentpole equivalence: a compacted async campaign reproduces the
+    exact K-sized rounds' final model state bit-for-bit (masked window
+    members contribute exactly +0.0 to the mean-family sums), with the
+    round function still traced exactly once — at window shape."""
+    kw = dict(num_rounds=ROUNDS, stream=stream, cohort=COHORT)
+    exp_exact = _fresh(run_cfg, population="exact")
+    res_exact = exp_exact.run(**kw)
+    exp_comp = _fresh(run_cfg, population="compact")
+    res_comp = exp_comp.run(**kw)
+    assert exp_comp.trace_count == 1
+    for a, b in zip(_state_leaves(res_exact.state),
+                    _state_leaves(res_comp.state)):
+        np.testing.assert_array_equal(a, b)
+    # the compacted rounds really were window-sized, not K-sized
+    assert all(len(r.client_ids) < K for r in res_comp.records)
+    assert all(len(r.client_ids) == K for r in res_exact.records)
+    assert res_comp.population == "compact"
+    # simulated timing is untouched by device compaction (timeline is exact)
+    assert res_comp.total_time == pytest.approx(res_exact.total_time)
+
+
+def test_meanfield_campaign_runs_with_restricted_timeline(run_cfg, stream):
+    exp = _fresh(run_cfg, population=MeanFieldPopulation(reps=6))
+    res = exp.run(num_rounds=ROUNDS, stream=stream, cohort=COHORT)
+    assert exp.trace_count == 1
+    pop = exp.population
+    assert pop.rep_ids is not None and len(pop.rep_ids) == 6
+    assert np.all(np.diff(pop.rep_ids) > 0) and pop.rep_ids.max() < K
+    # every trained client is a representative (timeline only launches reps)
+    for r in res.records:
+        assert set(r.client_ids.tolist()) <= set(pop.rep_ids.tolist())
+        assert np.isfinite(r.round_time) and r.round_time > 0
+    assert res.population == "meanfield"
+
+
+def test_meanfield_reallocate_solves_on_representatives(run_cfg, stream):
+    """Under reallocate=True the per-cell solves run on the representative
+    members with the pool scaled by multiplicity, and every client still
+    gets a finite priced allocation (broadcast from its nearest rep)."""
+    exp = _fresh(run_cfg, population=MeanFieldPopulation(reps=6))
+    res = exp.run(num_rounds=2, stream=stream, cohort=COHORT,
+                  reallocate=True)
+    for rec in res.records:
+        assert rec.alloc.feasible
+        assert np.isfinite(rec.alloc.T)
+        assert np.all(np.isfinite(np.asarray(rec.alloc.t_c)))
+        assert len(np.asarray(rec.alloc.t_c)) == K  # full-K broadcast
+
+
+# ---------------------------------------------------------------------------
+# Mean-field queue validation (the docstring-named tests)
+# ---------------------------------------------------------------------------
+
+
+def _poisson_cells(seed, K_jobs=600, M=2, rate=45.0):
+    rng = np.random.default_rng(seed)
+    assign = np.repeat(np.arange(M), K_jobs // M)
+    totals = np.empty(K_jobs)
+    for m in range(M):
+        totals[assign == m] = np.cumsum(
+            rng.exponential(1.0 / rate, K_jobs // M))
+    return assign, totals
+
+
+@pytest.mark.parametrize("model", ["fifo", "ps"])
+@pytest.mark.parametrize("seed", [1, 3])
+def test_meanfield_waits_match_exact_des_within_10pct(model, seed):
+    """The acceptance bar: at a K where both run, the mean-field per-cell
+    arrival-rate model prices the shared backhaul within 10% of the exact
+    per-job queue replay (Poisson arrivals, ρ ≈ 0.45 over the span)."""
+    K_jobs = 600
+    fcfg = FedsLLMConfig(num_clients=K_jobs)
+    s = 0.005  # deterministic service per delta
+    topo = EdgeCloudTopology(num_edges=2, backhaul_bps=fcfg.s_c_bits / s,
+                             backhaul_model=model)
+    assign, totals = _poisson_cells(seed, K_jobs=K_jobs)
+    exact = topo._queued_backhaul(fcfg, assign, 0.3, totals)
+    mf = meanfield_backhaul_hop(topo, fcfg, assign, 0.3, totals)
+    assert mf.shape == exact.shape
+    rel = abs(float(np.mean(mf)) - float(np.mean(exact))) \
+        / float(np.mean(exact))
+    assert rel < 0.10, f"{model} mean hop off by {rel:.1%}"
+
+
+@pytest.mark.parametrize("model,ref", [
+    ("fifo", queueing.md1_mean_wait), ("ps", queueing.ps_mean_wait)])
+def test_meanfield_matches_md1_poisson(model, ref):
+    """The analytic leg: on a single Poisson-fed cell the summed arrival
+    rate recovers the M/D/1 (FIFO) / PS reference mean wait."""
+    K_jobs, rate, s = 800, 90.0, 0.005  # rho = 0.45
+    fcfg = FedsLLMConfig(num_clients=K_jobs)
+    topo = EdgeCloudTopology(num_edges=1, backhaul_bps=fcfg.s_c_bits / s,
+                             backhaul_model=model)
+    assign, totals = _poisson_cells(7, K_jobs=K_jobs, M=1, rate=rate)
+    mf = meanfield_backhaul_hop(topo, fcfg, assign, 0.3, totals)
+    service = queueing.service_seconds(
+        np.full(K_jobs, fcfg.s_c_bits), topo.backhaul_bps)
+    mean_wait = float(np.mean(mf - service))
+    assert mean_wait == pytest.approx(ref(rate, s), rel=0.10)
+
+
+def test_meanfield_hop_zero_for_outage_clients():
+    fcfg = FedsLLMConfig(num_clients=6)
+    topo = EdgeCloudTopology(num_edges=2, backhaul_bps=1e6,
+                             backhaul_model="fifo")
+    assign = np.array([0, 0, 0, 1, 1, 1])
+    totals = np.array([0.1, 0.2, np.inf, 0.1, 0.3, 0.5])
+    hop = meanfield_backhaul_hop(topo, fcfg, assign, 0.3, totals)
+    assert hop[2] == 0.0
+    assert np.all(hop[np.isfinite(totals)] > 0)
+
+
+def test_meanfield_queued_hop_wired_into_topology():
+    """backhaul_hop dispatches to the population's analytic model, and an
+    unbound (or exact) population keeps the exact queue replay."""
+    fcfg = FedsLLMConfig(num_clients=8)
+    topo = EdgeCloudTopology(num_edges=2, backhaul_bps=1e6,
+                             backhaul_model="fifo")
+    assign = np.arange(8) % 2
+    totals = np.linspace(0.1, 0.8, 8)
+    pop = MeanFieldPopulation()
+    via_topo = topo.backhaul_hop(fcfg, assign, 0.3, totals, population=pop)
+    direct = meanfield_backhaul_hop(topo, fcfg, assign, 0.3, totals)
+    np.testing.assert_array_equal(via_topo, direct)
+    exact = topo.backhaul_hop(fcfg, assign, 0.3, totals)
+    np.testing.assert_array_equal(
+        exact, topo._queued_backhaul(fcfg, assign, 0.3, totals))
+    np.testing.assert_array_equal(
+        exact, topo.backhaul_hop(fcfg, assign, 0.3, totals,
+                                 population=ExactPopulation()))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume identity (satellite: guard family)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("population", ["compact", "meanfield"])
+def test_population_campaign_resume_bit_identical(run_cfg, stream, tmp_path,
+                                                  population):
+    kw = dict(stream=stream, cohort=COHORT)
+    full = _fresh(run_cfg, population=population).run(num_rounds=4, **kw)
+
+    ckpt = str(tmp_path / population)
+    part = _fresh(run_cfg, population=population).run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    assert part.num_rounds == 2
+    rest = _fresh(run_cfg, population=population).run(
+        num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    assert [r.round for r in rest.records] == [2, 3]
+    for a, b in zip(_state_leaves(full.state), _state_leaves(rest.state)):
+        np.testing.assert_array_equal(a, b)
+    for ra, rb in zip(full.records[2:], rest.records):
+        assert ra.metrics == rb.metrics
+        np.testing.assert_array_equal(ra.client_ids, rb.client_ids)
+
+
+def test_resume_refuses_population_mismatch(run_cfg, stream, tmp_path):
+    """Same guard family as scenario/topology/schedule digests: resuming
+    under a different population name OR window size must refuse."""
+    kw = dict(stream=stream, cohort=COHORT)
+    ckpt = str(tmp_path / "pop")
+    _fresh(run_cfg, population="compact").run(
+        num_rounds=2, checkpoint_dir=ckpt, checkpoint_every=2, **kw)
+    with pytest.raises(ValueError, match="different campaign"):
+        _fresh(run_cfg, population="exact").run(
+            num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+    with pytest.raises(ValueError, match="different campaign"):
+        _fresh(run_cfg, population=CompactPopulation(window=3)).run(
+            num_rounds=4, checkpoint_dir=ckpt, resume=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Sweep axis
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_population_axis(run_cfg, stream):
+    from repro.sim.sweep import run_sweep
+
+    res = run_sweep(run_cfg, 2, scenarios=("geo-blockfade",),
+                    allocators=("EB",), topologies=("edge-cloud",),
+                    schedules=("async",),
+                    populations=("exact", "compact"),
+                    stream=stream, cohort=COHORT)
+    assert res.populations == ("exact", "compact")
+    assert {r["population"] for r in res.records} == {"exact", "compact"}
+    rows = res.summary()
+    assert {r["population"] for r in rows} == {"exact", "compact"}
+    cell = res.cell("geo-blockfade", "EB", population="compact")
+    assert len(cell) == 2
+    with pytest.raises(ValueError, match="population"):
+        res.cell("geo-blockfade", "EB")
